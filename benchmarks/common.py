@@ -1,0 +1,44 @@
+"""Benchmark utilities: timing + distribution generators (paper §5)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall time of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+# The six input distributions of Leischner et al. (the randomized sample
+# sort paper) which the deterministic algorithm is immune to (C2).
+def make_distribution(name: str, n: int, rng: np.random.Generator):
+    if name == "uniform":
+        return rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32)
+    if name == "gaussian":
+        return (rng.normal(0, 2**29, n)).astype(np.int32)
+    if name == "zipf":
+        return (rng.zipf(1.3, n) % (2**31 - 1)).astype(np.int32)
+    if name == "sorted":
+        return np.sort(rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32))
+    if name == "reverse":
+        return np.sort(rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32))[::-1].copy()
+    if name == "all-equal":
+        return np.full(n, 123456789, np.int32)
+    if name == "bucket-killer":
+        # many duplicates of a few values — worst case for naive splitters
+        return rng.choice(np.array([3, 7, 11], np.int32), n)
+    raise KeyError(name)
+
+
+DISTRIBUTIONS = ["uniform", "gaussian", "zipf", "sorted", "reverse", "all-equal"]

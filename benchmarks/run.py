@@ -1,0 +1,62 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes (CI/container friendly)")
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        distribution_robustness,
+        moe_dispatch,
+        sample_size_sweep,
+        sort_throughput,
+        step_breakdown,
+        topk_partial,
+    )
+
+    quick = args.quick
+    suites = {
+        "sort_throughput": lambda: sort_throughput.run(
+            sizes=(65536, 262144) if quick else (65536, 262144, 1048576)),
+        "sample_size_sweep": lambda: sample_size_sweep.run(
+            n=131072 if quick else 524288,
+            svals=(16, 64) if quick else (8, 16, 32, 64, 128)),
+        "step_breakdown": lambda: step_breakdown.run(
+            n=262144 if quick else 1048576),
+        "distribution_robustness": lambda: distribution_robustness.run(
+            n=65536 if quick else 262144),
+        "moe_dispatch": lambda: moe_dispatch.run(
+            tokens=4096 if quick else 16384),
+        "topk_partial": lambda: topk_partial.run(
+            vocab=65536 if quick else 151936),
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                d = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.1f},{d}", flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

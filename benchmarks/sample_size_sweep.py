@@ -1,0 +1,31 @@
+"""Fig. 3 analogue: total runtime vs sample size s at fixed n (C4).
+
+The paper finds s=64 optimal on GTX285: bucket-sort time falls with s,
+sampling overhead (steps 3-7) grows with s.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import bucket_sort
+from repro.core.sort_config import SortConfig
+
+
+def run(n=524288, svals=(8, 16, 32, 64, 128), repeats=3):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32))
+    rows = []
+    best = (None, np.inf)
+    for s in svals:
+        cfg = SortConfig(tile=4096, s=s, direct_max=8192, impl="xla")
+        t = timeit(lambda a: bucket_sort.sort(a, cfg), x, repeats=repeats)
+        if t < best[1]:
+            best = (s, t)
+        rows.append(dict(name=f"sample_size_sweep/s={s}", us_per_call=t * 1e6,
+                         derived=f"n={n}"))
+    rows.append(dict(name="sample_size_sweep/best_s", us_per_call=best[1] * 1e6,
+                     derived=f"s={best[0]} (paper: 64 on GTX285)"))
+    return rows

@@ -1,0 +1,46 @@
+"""Fig. 4/6/7 analogue: sorting rate vs n, ours vs the paper's baselines.
+
+The paper's C1/C6 claims: near-linear runtime growth (fixed sorting
+rate) and parity with randomized sample sort on uniform data.  CPU
+wall-times here are proxies (TPU is the target); the fixed-rate SHAPE
+of the curve is the reproduced claim.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import baselines, bucket_sort
+from repro.core.sort_config import SortConfig
+
+CFG = SortConfig(tile=4096, s=64, direct_max=8192, impl="xla")
+
+
+def run(sizes=(65536, 262144, 1048576), repeats=3):
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in sizes:
+        x = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32))
+        t_ours = timeit(lambda a: bucket_sort.sort(a, CFG), x, repeats=repeats)
+        t_xla = timeit(lambda a: baselines.xla_sort(a)[0], x, repeats=repeats)
+        t_merge = timeit(lambda a: baselines.merge_sort(a, CFG)[0], x, repeats=repeats)
+        key = jax.random.PRNGKey(0)
+        t_rand = timeit(
+            lambda a: baselines.randomized_sample_sort(a, key, CFG)[0], x,
+            repeats=repeats,
+        )
+        rate = n / t_ours / 1e6
+        rows.append(
+            dict(name=f"sort_throughput/n={n}", us_per_call=t_ours * 1e6,
+                 derived=f"rate={rate:.2f}Mkeys/s xla={t_xla*1e6:.0f}us "
+                         f"merge={t_merge*1e6:.0f}us rand={t_rand*1e6:.0f}us")
+        )
+    # fixed sorting rate check (C1): rate ratio across 16x size range
+    r0 = sizes[0] / rows[0]["us_per_call"]
+    r2 = sizes[-1] / rows[-1]["us_per_call"]
+    rows.append(dict(name="sort_throughput/rate_ratio_largest_vs_smallest",
+                     us_per_call=0.0, derived=f"{r2 / r0:.3f} (~1.0 == linear)"))
+    return rows

@@ -1,0 +1,83 @@
+"""Fig. 5 analogue: per-step timing of Algorithm 1 (C3).
+
+The paper observes: local sort (step 2) + sublist sort (step 9)
+dominate; deterministic-sampling overhead (steps 3-7) is small; the
+relocation (step 8) is cheap because it is one coalesced pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import bucket_sort as bs
+from repro.core.sort_config import SortConfig, round_up
+from repro.kernels import ops
+
+CFG = SortConfig(tile=4096, s=64, direct_max=8192, impl="xla")
+
+
+def run(n=1048576, repeats=3):
+    rng = np.random.default_rng(2)
+    x = rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32)
+    u = ops.to_sortable(jnp.asarray(x))
+    t, sper = CFG.tile, CFG.s
+    lp = round_up(n, t)
+    m = lp // t
+    s_round = min(max(2 * lp // t and 64, 2), sper)
+
+    @jax.jit
+    def local_sort(u):
+        v = jnp.arange(lp, dtype=jnp.int32)
+        return ops.sort_tiles(u.reshape(m, t), v.reshape(m, t), impl="xla")
+
+    tk, tv = jax.block_until_ready(local_sort(u))
+
+    @jax.jit
+    def sample_and_sort(tk, tv):
+        idx = (jnp.arange(1, sper + 1, dtype=jnp.int32) * (t // sper)) - 1
+        sk = tk[:, idx].reshape(1, m * sper)
+        sv = tv[:, idx].reshape(1, m * sper)
+        ssk, ssv, _ = bs._sort_rows(sk, sv, CFG, 2 * lp, None)
+        return ssk, ssv
+
+    ssk, ssv = jax.block_until_ready(sample_and_sort(tk, tv))
+
+    @jax.jit
+    def ranks_fn(tk, tv, ssk, ssv):
+        sp_idx = (jnp.arange(1, s_round, dtype=jnp.int32) * (m * sper)) // s_round
+        spk = jnp.repeat(ssk[:, sp_idx], m, axis=0)
+        spv = jnp.repeat(ssv[:, sp_idx], m, axis=0)
+        return ops.splitter_ranks(tk, tv, spk, spv, impl="xla")
+
+    ranks = jax.block_until_ready(ranks_fn(tk, tv, ssk, ssv))
+
+    @jax.jit
+    def full(u):
+        return bs._sort_canonical(u, CFG)
+
+    rows = []
+    t_local = timeit(local_sort, u, repeats=repeats)
+    t_samp = timeit(sample_and_sort, tk, tv, repeats=repeats)
+    t_rank = timeit(ranks_fn, tk, tv, ssk, ssv, repeats=repeats)
+    t_full = timeit(full, u, repeats=repeats)
+    rest = max(t_full - t_local - t_samp - t_rank, 0.0)
+    for name, tt in [
+        ("step2_local_sort", t_local),
+        ("steps3-5_sampling", t_samp),
+        ("step6_sample_indexing", t_rank),
+        ("steps7-9_relocate_and_bucket_sort", rest),
+        ("total", t_full),
+    ]:
+        frac = tt / t_full if t_full else 0
+        rows.append(dict(name=f"step_breakdown/{name}", us_per_call=tt * 1e6,
+                         derived=f"{100*frac:.1f}% of total (n={n})"))
+    overhead = (t_samp + t_rank) / t_full
+    rows.append(dict(
+        name="step_breakdown/sampling_overhead_fraction", us_per_call=0.0,
+        derived=f"{100*overhead:.1f}% (paper C3: small)"))
+    return rows

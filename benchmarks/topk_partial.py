@@ -1,0 +1,29 @@
+"""Beyond-paper: partial deterministic sample sort for serving top-k
+(vocab-scale logits) vs full sort and jax.lax.top_k."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import bucket_sort, partial_sort
+from repro.core.sort_config import SortConfig
+
+CFG = SortConfig(tile=4096, s=64, direct_max=8192, impl="xla")
+
+
+def run(vocab=151936, k=64, repeats=3):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=vocab).astype(np.float32))
+    t_part = timeit(lambda a: partial_sort.topk(a, k, CFG)[0], x, repeats=repeats)
+    t_full = timeit(lambda a: bucket_sort.sort(a, CFG), x, repeats=repeats)
+    t_lax = timeit(lambda a: jax.lax.top_k(a, k)[0], x, repeats=repeats)
+    return [
+        dict(name=f"topk_partial/partial_sample_sort_v={vocab}_k={k}",
+             us_per_call=t_part * 1e6, derived=f"speedup_vs_full={t_full/t_part:.2f}x"),
+        dict(name="topk_partial/full_sort", us_per_call=t_full * 1e6, derived=""),
+        dict(name="topk_partial/lax_top_k", us_per_call=t_lax * 1e6,
+             derived="XLA native reference"),
+    ]

@@ -1,0 +1,36 @@
+"""Multi-device deterministic sample sort (shard_map + fixed-capacity
+all_to_all).  Runs on 8 forced host devices:
+
+  PYTHONPATH=src python examples/distributed_sort_demo.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SortConfig, make_sharded_sort
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = SortConfig(tile=1024, s=32, direct_max=2048, impl="xla")
+n = 1 << 17
+
+run, spec = make_sharded_sort(mesh, ("data", "model"), n, cfg, oversample=8)
+print(f"devices={spec.d} n={n} per-pair capacity={spec.c_pair} "
+      f"(deterministic bound; randomized splitters admit NO static bound)")
+
+rng = np.random.default_rng(0)
+for dist, x in {
+    "uniform": rng.integers(-2**31, 2**31 - 1, n).astype(np.int32),
+    "zipf-skew": (rng.zipf(1.5, n) % 100000).astype(np.int32),
+    "all-equal": np.full(n, 42, np.int32),
+}.items():
+    sk, sv, counts, mw = map(np.asarray, run(jnp.asarray(x)))
+    oc = spec.out_cap
+    got = np.concatenate([sk[i * oc : i * oc + counts[i]] for i in range(spec.d)])
+    assert (got == np.sort(x)).all()
+    print(f"{dist:10s}: OK  shard loads={counts.tolist()} max_pair_fill={mw.max()}/{spec.c_pair}")

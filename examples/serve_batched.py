@@ -1,0 +1,14 @@
+"""Batched serving example: prefill + decode with partial-sample-sort
+top-k sampling (see repro/launch/serve.py for the full launcher).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen2-1.5b",
+     "--smoke", "--requests", "4", "--prompt-len", "32", "--gen", "8"],
+    check=True,
+)

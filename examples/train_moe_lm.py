@@ -1,0 +1,76 @@
+"""End-to-end driver: train a ~100M-param MoE LM for a few hundred steps
+with the paper's sample-sort token dispatch, fault-tolerant runtime,
+checkpoint/restore, and synthetic data.
+
+  PYTHONPATH=src python examples/train_moe_lm.py --steps 300
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import sharding as shd
+from repro.config import (
+    ArchConfig, LayerSlot, ModelConfig, MoEConfig, OptimizerConfig,
+    ParallelConfig, ShapeConfig,
+)
+from repro.data import SyntheticDataset
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import build_train_step, make_plan, param_shardings
+from repro.models import api, meta
+from repro.optim import adamw_init
+from repro.runtime import StragglerMonitor, TrainDriver
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=256)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_moe_example")
+args = ap.parse_args()
+
+# ~100M-param MoE: 8 layers, d=512, 16 experts top-2, sample-sort dispatch
+model = ModelConfig(
+    name="moe-100m", n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+    d_ff=1536, vocab=32000, layer_pattern=(LayerSlot("attn", "moe"),),
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=512,
+                  dispatch="sample_sort"),
+    param_dtype="float32", dtype="float32", attn_chunk=256, remat="none",
+)
+arch = ArchConfig(model=model)
+tpl = api.template(model)
+print(f"params: {meta.count_params(tpl)/1e6:.1f}M")
+
+n_dev = len(jax.devices())
+mesh = make_mesh((n_dev, 1), ("data", "model"))
+par = ParallelConfig(mesh_shape=(n_dev, 1), mesh_axes=("data", "model"))
+plan = make_plan(arch, ShapeConfig("ex", args.seq, args.batch, "train"), mesh, par)
+opt = OptimizerConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+
+with shd.sharding_ctx(mesh, plan.rules):
+    jitted = jax.jit(build_train_step(plan, opt), donate_argnums=(0, 1))
+
+    def init_state():
+        params = meta.init_params(tpl, jax.random.PRNGKey(0))
+        params = jax.tree.map(jax.device_put, params, param_shardings(plan))
+        return (params, adamw_init(params, opt))
+
+    def step_fn(state, batch):
+        import jax.numpy as jnp
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o = state
+        p, o, m = jitted(p, o, batch)
+        return (p, o), m
+
+    ds = SyntheticDataset(model.vocab, args.seq, args.batch, seed=0)
+    driver = TrainDriver(
+        step_fn, init_state, ds, ckpt_dir=args.ckpt_dir, ckpt_every=100,
+        log_every=20, monitor=StragglerMonitor(),
+    )
+    state, history = driver.run(args.steps)
+
+losses = [h["loss"] for h in history]
+print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+assert losses[-1] < losses[0] and np.isfinite(losses[-1])
+print("OK: loss decreased; checkpoints in", args.ckpt_dir)

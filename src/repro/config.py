@@ -1,0 +1,182 @@
+"""Framework configuration: model / parallelism / shapes / training.
+
+One ``ModelConfig`` covers all ten assigned architectures via a periodic
+layer pattern: each layer slot is (mixer, ffn) where mixer is attention
+(GQA or MLA), a Mamba-2 SSD block, or none, and ffn is a dense MLP, an
+MoE (with the paper's sample-sort dispatch), or none.  The decoder
+stack = ``layer_pattern`` repeated ``n_layers/len(pattern)`` times and
+scanned (fast compiles, remat-friendly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style)."""
+
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 64
+    top_k: int = 6
+    d_ff_expert: int = 1408
+    n_shared_experts: int = 0  # shared-expert d_ff = n_shared * d_ff_expert
+    capacity_factor: float = 1.25
+    dispatch: Literal["sample_sort", "xla_sort", "dense"] = "sample_sort"
+    router_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) block geometry."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSlot:
+    mixer: Literal["attn", "mla", "mamba", "none"] = "attn"
+    ffn: Literal["dense", "moe", "none"] = "dense"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    attn_bias: bool = False  # qwen2: bias on QKV projections
+    rope_theta: float = 10000.0
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    norm_eps: float = 1e-5
+    activation: Literal["swiglu", "gelu"] = "swiglu"
+    tie_embeddings: bool = False
+    layer_pattern: tuple[LayerSlot, ...] = (LayerSlot(),)
+    mla: MLAConfig | None = None
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    # encoder-decoder (whisper): encoder reuses d_model/heads/d_ff with
+    # bidirectional attention; decoder adds cross-attention per layer.
+    n_encoder_layers: int = 0
+    encoder_positions: int = 1500  # whisper: 30s of audio frames
+    # modality frontend stub: inputs include precomputed prefix embeddings
+    frontend: Literal["none", "audio", "vision"] = "none"
+    frontend_len: int = 0  # patches/frames supplied by the stub
+    # dtypes
+    param_dtype: str = "bfloat16"
+    dtype: str = "bfloat16"  # activation/compute dtype
+    # memory
+    remat: Literal["none", "full", "dots"] = "full"
+    sub_quadratic: bool = False  # True for SSM/hybrid: long_500k cells run
+    attn_chunk: int = 1024  # KV block for chunked (flash-style) attention
+    loss_chunk: int = 2048  # sequence chunk for the CE loss (no full logits)
+    # scan_layers=False unrolls the period loop — used by the dry-run's
+    # 1- and 2-period probe compiles because XLA cost_analysis counts a
+    # while-loop body ONCE (trip counts are not multiplied in).
+    scan_layers: bool = True
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding tables padded to 256 (Megatron convention) so the
+        vocab dim shards evenly; pad logits are masked in unembed."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % len(self.layer_pattern) == 0, (
+            self.n_layers, len(self.layer_pattern))
+        return self.n_layers // len(self.layer_pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"] = "train"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """Mesh + sharding policy."""
+
+    mesh_shape: tuple[int, ...] = (16, 16)
+    mesh_axes: tuple[str, ...] = ("data", "model")
+    fsdp: bool = False  # shard the "embed" dim of params over data axis
+    fsdp_axes: tuple[str, ...] = ("data",)
+    remat_scan: bool = True
+    # distributed-optimization tricks
+    grad_accum: int = 1  # microbatch steps (scan)
+    compress_grads: bool = False  # int8 all-reduce w/ error feedback (DP path)
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in self.mesh_axes if a in ("pod", "data"))
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    moment_dtype: str = "float32"  # "bfloat16" for low-mem (jamba-398b)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 200
+    log_every: int = 10
+    ckpt_every: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    seed: int = 0
+    optimizer: OptimizerConfig = OptimizerConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """Everything the launcher needs for one --arch id."""
+
+    model: ModelConfig
+    shapes: tuple[str, ...] = ("train_4k", "prefill_32k", "decode_32k")
+    skip_notes: str = ""
+    fsdp: bool = False
+    moment_dtype: str = "float32"

@@ -1,0 +1,30 @@
+"""Architecture registry: --arch <id> -> ArchConfig (+ reduced SMOKE)."""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "llama3.2-3b": "repro.configs.llama3p2_3b",
+    "qwen2-1.5b": "repro.configs.qwen2_1p5b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "mamba2-2.7b": "repro.configs.mamba2_2p7b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1p5_large_398b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+}
+
+
+def get_config(name: str):
+    return importlib.import_module(ARCHS[name]).CONFIG
+
+
+def get_smoke(name: str):
+    return importlib.import_module(ARCHS[name]).SMOKE
+
+
+def all_archs():
+    return list(ARCHS)

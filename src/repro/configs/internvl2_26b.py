@@ -1,0 +1,24 @@
+"""internvl2-26b [vlm]: 48L d=6144 48H (GQA kv=8) ff=16384 vocab=92553.
+
+InternViT frontend is a STUB (precomputed patch embeddings, 256 tokens
+per image after pixel shuffle); backbone = InternLM2-20B geometry
+[arXiv:2404.16821; hf].
+"""
+
+from repro.config import ArchConfig, ModelConfig
+from repro.configs.common import LM_SHAPES, SKIP_FULL_ATTN, smoke_shrink
+
+MODEL = ModelConfig(
+    name="internvl2-26b",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92553,
+    frontend="vision",
+    frontend_len=256,
+)
+
+CONFIG = ArchConfig(model=MODEL, shapes=LM_SHAPES, skip_notes=SKIP_FULL_ATTN)
+SMOKE = smoke_shrink(MODEL)

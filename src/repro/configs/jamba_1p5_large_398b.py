@@ -1,0 +1,37 @@
+"""jamba-1.5-large-398b [hybrid]: 72L d=8192 64H (GQA kv=8) ff=24576
+vocab=65536, MoE 16e top-2 [arXiv:2403.19887; hf].
+
+Period-8 layout (attn:mamba = 1:7) with MoE every other layer:
+  slot0 attn+dense, slot1..7 mamba, MoE on odd slots (4 MoE / period,
+  36 MoE layers total).  398B params; FSDP + bf16 optimizer moments to
+  fit 16 GB/chip (DESIGN.md §5).  Hybrid => long_500k RUNS.
+"""
+
+from repro.config import ArchConfig, LayerSlot, ModelConfig, MoEConfig, SSMConfig
+from repro.configs.common import LM_SHAPES_LONG, smoke_shrink
+
+_PERIOD = tuple(
+    LayerSlot("attn" if i == 0 else "mamba", "moe" if i % 2 else "dense")
+    for i in range(8)
+)
+
+MODEL = ModelConfig(
+    name="jamba-1.5-large-398b",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab=65536,
+    layer_pattern=_PERIOD,
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=24576,
+                  dispatch="sample_sort"),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=64,
+                  n_groups=1, chunk=256),
+    sub_quadratic=True,
+)
+
+CONFIG = ArchConfig(
+    model=MODEL, shapes=LM_SHAPES_LONG, fsdp=True, moment_dtype="bfloat16"
+)
+SMOKE = smoke_shrink(MODEL, n_layers=8)

@@ -1,0 +1,24 @@
+"""llama3.2-3b [dense]: 28L d=3072 24H (GQA kv=8) ff=8192 vocab=128256.
+
+Small llama3: RMSNorm/SwiGLU, RoPE theta 500k, tied embeddings
+[hf:meta-llama/Llama-3.2-3B; unverified].
+"""
+
+from repro.config import ArchConfig, ModelConfig
+from repro.configs.common import LM_SHAPES, SKIP_FULL_ATTN, smoke_shrink
+
+MODEL = ModelConfig(
+    name="llama3.2-3b",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=128256,
+    head_dim=128,
+    rope_theta=500000.0,
+    tie_embeddings=True,
+)
+
+CONFIG = ArchConfig(model=MODEL, shapes=LM_SHAPES, skip_notes=SKIP_FULL_ATTN)
+SMOKE = smoke_shrink(MODEL)

@@ -1,0 +1,25 @@
+"""mamba2-2.7b [ssm]: 64L d=2560 attn-free vocab=50280 ssm_state=128.
+
+SSD (state-space duality) blocks [arXiv:2405.21060].  Sub-quadratic =>
+the long_500k decode cell RUNS for this arch (O(1)-state decode).
+"""
+
+from repro.config import ArchConfig, LayerSlot, ModelConfig, SSMConfig
+from repro.configs.common import LM_SHAPES_LONG, smoke_shrink
+
+MODEL = ModelConfig(
+    name="mamba2-2.7b",
+    n_layers=64,
+    d_model=2560,
+    n_heads=1,  # attention-free; SSD heads derive from ssm config
+    n_kv_heads=1,
+    d_ff=0,
+    vocab=50280,
+    layer_pattern=(LayerSlot("mamba", "none"),),
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64,
+                  n_groups=1, chunk=256),
+    sub_quadratic=True,
+)
+
+CONFIG = ArchConfig(model=MODEL, shapes=LM_SHAPES_LONG)
+SMOKE = smoke_shrink(MODEL)

@@ -1,0 +1,29 @@
+"""minicpm3-4b [dense]: 62L d=2560 40H ff=6400 vocab=73448 — MLA.
+
+Multi-head Latent Attention (DeepSeek-V2 geometry: q_lora 768,
+kv_lora 256, nope 64 / rope 32 / v 64) [hf:openbmb/MiniCPM3-4B; hf].
+"""
+
+from repro.config import ArchConfig, LayerSlot, MLAConfig, ModelConfig
+from repro.configs.common import LM_SHAPES, SKIP_FULL_ATTN, smoke_shrink
+
+MODEL = ModelConfig(
+    name="minicpm3-4b",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    vocab=73448,
+    layer_pattern=(LayerSlot("mla", "dense"),),
+    mla=MLAConfig(
+        q_lora_rank=768,
+        kv_lora_rank=256,
+        qk_nope_head_dim=64,
+        qk_rope_head_dim=32,
+        v_head_dim=64,
+    ),
+)
+
+CONFIG = ArchConfig(model=MODEL, shapes=LM_SHAPES, skip_notes=SKIP_FULL_ATTN)
+SMOKE = smoke_shrink(MODEL)

@@ -1,0 +1,23 @@
+"""qwen2-1.5b [dense]: 28L d=1536 12H (GQA kv=2) ff=8960 vocab=151936.
+
+GQA with QKV bias, tied embeddings [arXiv:2407.10671; hf].
+"""
+
+from repro.config import ArchConfig, ModelConfig
+from repro.configs.common import LM_SHAPES, SKIP_FULL_ATTN, smoke_shrink
+
+MODEL = ModelConfig(
+    name="qwen2-1.5b",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab=151936,
+    attn_bias=True,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+)
+
+CONFIG = ArchConfig(model=MODEL, shapes=LM_SHAPES, skip_notes=SKIP_FULL_ATTN)
+SMOKE = smoke_shrink(MODEL)

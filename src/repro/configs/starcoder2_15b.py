@@ -1,0 +1,24 @@
+"""starcoder2-15b [dense]: 40L d=6144 48H (GQA kv=4) ff=24576 vocab=49152.
+
+GQA + RoPE; layernorm/GELU with biases per StarCoder2 [arXiv:2402.19173; hf].
+"""
+
+from repro.config import ArchConfig, ModelConfig
+from repro.configs.common import LM_SHAPES, SKIP_FULL_ATTN, smoke_shrink
+
+MODEL = ModelConfig(
+    name="starcoder2-15b",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    d_ff=24576,
+    vocab=49152,
+    attn_bias=True,
+    norm="layernorm",
+    activation="gelu",
+    rope_theta=100000.0,
+)
+
+CONFIG = ArchConfig(model=MODEL, shapes=LM_SHAPES, skip_notes=SKIP_FULL_ATTN)
+SMOKE = smoke_shrink(MODEL)

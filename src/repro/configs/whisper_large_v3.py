@@ -1,0 +1,29 @@
+"""whisper-large-v3 [audio]: 32+32L d=1280 20H ff=5120 vocab=51866.
+
+Encoder-decoder; conv audio frontend is a STUB (input_specs provides
+precomputed frame embeddings, 1500 frames = 30 s) [arXiv:2212.04356].
+Decoder learned positions approximated sinusoidally (DESIGN.md).
+"""
+
+from repro.config import ArchConfig, ModelConfig
+from repro.configs.common import LM_SHAPES, SKIP_FULL_ATTN, smoke_shrink
+
+MODEL = ModelConfig(
+    name="whisper-large-v3",
+    n_layers=32,
+    n_encoder_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=51866,
+    attn_bias=True,
+    norm="layernorm",
+    activation="gelu",
+    tie_embeddings=True,
+    encoder_positions=1500,
+    frontend="audio",
+)
+
+CONFIG = ArchConfig(model=MODEL, shapes=LM_SHAPES, skip_notes=SKIP_FULL_ATTN)
+SMOKE = smoke_shrink(MODEL)

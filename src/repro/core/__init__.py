@@ -1,0 +1,23 @@
+# The paper's primary contribution: deterministic sample sort (GPU BUCKET
+# SORT, Dehne & Zaboli 2010) adapted to TPU — single-device Algorithm 1,
+# the multi-chip/pod distributed variant, partial (top-k) sort, and the
+# baselines the paper compares against.
+
+from repro.core.bucket_sort import argsort, sort, sort_kv, sort_with_stats
+from repro.core.distributed_sort import DistSortSpec, make_sharded_sort, sorted_shard
+from repro.core.partial_sort import topk
+from repro.core.sort_config import DEFAULT_CONFIG, PAPER_CONFIG, SortConfig
+
+__all__ = [
+    "argsort",
+    "sort",
+    "sort_kv",
+    "sort_with_stats",
+    "topk",
+    "SortConfig",
+    "DEFAULT_CONFIG",
+    "PAPER_CONFIG",
+    "DistSortSpec",
+    "make_sharded_sort",
+    "sorted_shard",
+]

@@ -1,0 +1,229 @@
+"""Baselines the paper compares against (§5, Figs. 6-7), reproduced in JAX.
+
+1. ``randomized_sample_sort`` — Leischner/Osipov/Sanders (IPDPS'10):
+   identical pipeline to Algorithm 1 but splitters come from RANDOM
+   samples.  Bucket sizes are then only probabilistically bounded, so a
+   static-shape TPU implementation must pick a capacity factor and can
+   OVERFLOW (elements dropped -> retry with a larger factor).  We expose
+   the overflow count and max bucket fill — the quantities whose
+   input-distribution dependence is the paper's core argument (C2).
+
+2. ``merge_sort`` — Thrust-Merge-like (Satish/Harris/Garland IPDPS'09):
+   bitonic-sorted tiles + log(m) rounds of pairwise bitonic merges.
+
+3. ``xla_sort`` — XLA's native sort (the "vendor library" reference).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, next_pow2, round_up
+from repro.kernels import ops
+from repro.kernels.bitonic import bitonic_network_rows
+
+_MAXU = jnp.uint32(0xFFFFFFFF)
+_IMAX = jnp.int32(2**31 - 1)
+
+
+# ----------------------------------------------------------------------
+# Randomized sample sort (one bucket round + XLA row sort of buckets)
+# ----------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "capacity_factor", "with_stats")
+)
+def _randomized_canonical(u, rng_key, cfg: SortConfig, capacity_factor: float,
+                          with_stats: bool):
+    (n,) = u.shape
+    t, s = cfg.tile, cfg.s
+    lp = round_up(n, t)
+    vals = jnp.arange(n, dtype=jnp.int32)
+    if lp > n:
+        u = jnp.concatenate([u, jnp.full((lp - n,), _MAXU, jnp.uint32)])
+        vals = jnp.concatenate(
+            [vals, lp + jnp.arange(lp - n, dtype=jnp.int32)]
+        )
+    m = lp // t
+
+    tk, tv = ops.sort_tiles(
+        u.reshape(m, t), vals.reshape(m, t), impl=cfg.impl, interpret=cfg.interpret
+    )
+
+    # RANDOM oversampled splitters (a*s random elements, every a-th of the
+    # sorted sample), a la Leischner et al.
+    a = 8
+    flat_idx = jax.random.randint(rng_key, (a * s,), 0, lp)
+    sk = u[flat_idx]
+    sv = vals[flat_idx]
+    ssk, ssv = ops.sort_tiles(
+        _pad_row(sk, _MAXU), _pad_row(sv, _IMAX),
+        impl=cfg.impl, interpret=cfg.interpret,
+    )
+    sp_idx = jnp.arange(1, s, dtype=jnp.int32) * a
+    spk = jnp.broadcast_to(ssk[0, sp_idx], (m, s - 1))
+    spv = jnp.broadcast_to(ssv[0, sp_idx], (m, s - 1))
+
+    ranks = ops.splitter_ranks(
+        tk, tv, spk, spv, impl=cfg.impl, interpret=cfg.interpret
+    )
+    zeros = jnp.zeros((m, 1), jnp.int32)
+    starts = jnp.concatenate([zeros, ranks], axis=1)
+    counts = (
+        jnp.concatenate([ranks, jnp.full((m, 1), t, jnp.int32)], axis=1) - starts
+    )
+    tile_off = jnp.cumsum(counts, axis=0) - counts  # (m, s)
+    totals = counts.sum(axis=0)  # (s,)
+
+    # NO deterministic bound here -> heuristic static capacity + overflow.
+    cap = round_up(int(capacity_factor * lp / s), 128)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (m, t), 1)
+    ind = jnp.zeros((m, t + 1), jnp.int32)
+    ind = ind.at[jax.lax.broadcasted_iota(jnp.int32, ranks.shape, 0), ranks].add(1)
+    bucket_id = jnp.cumsum(ind, axis=1)[:, :t]
+    p_rel = pos - jnp.take_along_axis(starts, bucket_id, axis=1)
+    within = jnp.take_along_axis(tile_off, bucket_id, axis=1) + p_rel
+    dest = bucket_id * cap + within
+    overflow = jnp.sum(within >= cap)
+    dest = jnp.where(within < cap, dest, s * cap)
+
+    bk = jnp.full((s * cap,), _MAXU, jnp.uint32)
+    bv = jnp.full((s * cap,), _IMAX, jnp.int32)
+    bk = bk.at[dest.reshape(-1)].set(tk.reshape(-1), mode="drop")
+    bv = bv.at[dest.reshape(-1)].set(tv.reshape(-1), mode="drop")
+
+    # bucket sort via XLA row sort (stand-in for the recursive step 9)
+    sk2, sv2 = jax.lax.sort(
+        (bk.reshape(s, cap), bv.reshape(s, cap)), dimension=-1, num_keys=2
+    )
+
+    # compact buckets back to dense
+    boff = jnp.cumsum(totals) - totals
+    p = jax.lax.broadcasted_iota(jnp.int32, (s, cap), 1)
+    valid = p < totals[:, None]
+    dflat = jnp.where(valid, boff[:, None] + p, lp)
+    okk = jnp.full((lp,), _MAXU, jnp.uint32)
+    ovv = jnp.full((lp,), _IMAX, jnp.int32)
+    okk = okk.at[dflat.reshape(-1)].set(sk2.reshape(-1), mode="drop")
+    ovv = ovv.at[dflat.reshape(-1)].set(sv2.reshape(-1), mode="drop")
+    stats = (jnp.max(totals), overflow) if with_stats else (None, None)
+    return okk[:n], ovv[:n], stats
+
+
+def _pad_row(x, fill):
+    n = x.shape[0]
+    lp = next_pow2(n)
+    if lp > n:
+        x = jnp.concatenate([x, jnp.full((lp - n,), fill, x.dtype)])
+    return x[None]
+
+
+def randomized_sample_sort(
+    x: jax.Array,
+    rng_key,
+    cfg: SortConfig = DEFAULT_CONFIG,
+    capacity_factor: float = 4.0,
+    with_stats: bool = False,
+):
+    """Randomized sample sort baseline.  Returns (sorted, perm[, stats]).
+
+    stats = (max_bucket_fill, overflow_count): overflow > 0 means dropped
+    elements (result invalid — caller must retry with a larger factor).
+    This data-dependent failure mode is precisely what the deterministic
+    algorithm eliminates.
+    """
+    u = ops.to_sortable(x)
+    sk, sv, stats = _randomized_canonical(
+        u, rng_key, cfg, capacity_factor, with_stats
+    )
+    out = ops.from_sortable(sk, x.dtype)
+    if with_stats:
+        return out, sv, stats
+    return out, sv
+
+
+# ----------------------------------------------------------------------
+# Thrust-Merge-like: bitonic tile sort + log(m) pairwise merge rounds
+# ----------------------------------------------------------------------
+
+
+def _bitonic_merge_rows(keys, vals):
+    """Merge rows of (r, 2L) where [:, :L] ascends and [:, L:] descends."""
+    c = keys.shape[-1]
+    d = c // 2
+    while d >= 1:
+        keys, vals = _merge_pass(keys, vals, d)
+        d //= 2
+    return keys, vals
+
+
+def _merge_pass(keys, vals, d):
+    lead = keys.shape[:-1]
+    c = keys.shape[-1]
+    k3 = keys.reshape(lead + (c // (2 * d), 2, d))
+    v3 = vals.reshape(lead + (c // (2 * d), 2, d))
+    klo, khi = k3[..., 0, :], k3[..., 1, :]
+    vlo, vhi = v3[..., 0, :], v3[..., 1, :]
+    swap = (klo > khi) | ((klo == khi) & (vlo > vhi))
+    nk = jnp.stack(
+        (jnp.where(swap, khi, klo), jnp.where(swap, klo, khi)), axis=-2
+    ).reshape(lead + (c,))
+    nv = jnp.stack(
+        (jnp.where(swap, vhi, vlo), jnp.where(swap, vlo, vhi)), axis=-2
+    ).reshape(lead + (c,))
+    return nk, nv
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _merge_canonical(u, cfg: SortConfig):
+    (n,) = u.shape
+    t = cfg.tile
+    lp = max(round_up(n, t), t)
+    vals = jnp.arange(n, dtype=jnp.int32)
+    if lp > n:
+        u = jnp.concatenate([u, jnp.full((lp - n,), _MAXU, jnp.uint32)])
+        vals = jnp.concatenate([vals, lp + jnp.arange(lp - n, dtype=jnp.int32)])
+    m = lp // t
+    tk, tv = ops.sort_tiles(
+        u.reshape(m, t), vals.reshape(m, t), impl=cfg.impl, interpret=cfg.interpret
+    )
+    # pad row count to a power of two with all-MAX rows
+    mp = next_pow2(m)
+    if mp > m:
+        tk = jnp.concatenate(
+            [tk, jnp.full((mp - m, t), _MAXU, jnp.uint32)], axis=0
+        )
+        tv = jnp.concatenate([tv, jnp.full((mp - m, t), _IMAX, jnp.int32)], axis=0)
+    while tk.shape[0] > 1:
+        r, length = tk.shape
+        a_k, b_k = tk[0::2], tk[1::2]
+        a_v, b_v = tv[0::2], tv[1::2]
+        cat_k = jnp.concatenate([a_k, b_k[:, ::-1]], axis=1)  # bitonic rows
+        cat_v = jnp.concatenate([a_v, b_v[:, ::-1]], axis=1)
+        tk, tv = _bitonic_merge_rows(cat_k, cat_v)
+    return tk[0, :n], tv[0, :n]
+
+
+def merge_sort(x: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
+    """Thrust-Merge-like baseline: tile sort + pairwise bitonic merging."""
+    u = ops.to_sortable(x)
+    sk, sv = _merge_canonical(u, cfg)
+    return ops.from_sortable(sk, x.dtype), sv
+
+
+# ----------------------------------------------------------------------
+# XLA native sort
+# ----------------------------------------------------------------------
+
+
+@jax.jit
+def xla_sort(x: jax.Array):
+    """XLA's built-in sort (reference oracle + perf baseline)."""
+    idx = jnp.arange(x.shape[0], dtype=jnp.int32)
+    u = ops.to_sortable(x)
+    sk, sv = jax.lax.sort((u, idx), dimension=0, num_keys=2)
+    return ops.from_sortable(sk, x.dtype), sv

@@ -1,0 +1,233 @@
+"""GPU BUCKET SORT (Dehne & Zaboli 2010, Algorithm 1) — TPU-native, static shapes.
+
+Single-device deterministic sample sort.  The paper's nine steps map to:
+
+  step 1  split into tiles            -> reshape (rows, L) -> (rows*m, T)
+  step 2  local sort per SM           -> Pallas bitonic tile sort (VMEM)
+  step 3  s equidistant local samples -> strided slice fused with step 2 output
+  step 4  sort all samples            -> recursive call on the sample array
+  step 5  s equidistant global samples-> strided slice of sorted samples
+  step 6  sample indexing             -> Pallas splitter-rank kernel
+  step 7  column-major prefix sum     -> cumsums over (rows, m, s) counts
+  step 8  data relocation             -> one scatter into (rows*s, B) buckets
+  step 9  sublist sort                -> recursion on bucket rows, then a
+                                         compaction scatter back to dense rows
+
+TPU adaptation (see DESIGN.md §2): buckets live in a DENSE (rows*s, B)
+array with static capacity B = L/s_round + L/s — the deterministic
+regular-sampling bound makes this capacity *guaranteed*, which is what
+lets the whole sort be expressed with static shapes (a hard requirement
+under XLA).  Randomized sample sort admits no such static capacity.
+
+Correctness invariants (tested, incl. hypothesis properties):
+  * elements are (key, payload) pairs, payload = original index =>
+    all pairs are unique => the capacity bound holds for ANY input
+    (duplicates included) and the sort is STABLE;
+  * pad elements introduced anywhere in the recursion draw unique
+    payloads from one globally-monotone range (threaded ``pad_base``),
+    so pads are unique too, obey the same bound, sort after every real
+    element, and nothing is ever silently dropped (asserted in tests).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, next_pow2, round_up
+from repro.kernels import ops
+
+_MAXU = jnp.uint32(0xFFFFFFFF)
+_INT_MAX = 2**31 - 1
+
+
+def _pad_cols(keys, vals, new_len, pad_base):
+    """Pad the last axis to new_len with (MAXU, pad_base + iota) pairs."""
+    r, length = keys.shape
+    extra = new_len - length
+    if extra == 0:
+        return keys, vals, pad_base
+    pk = jnp.full((r, extra), _MAXU, jnp.uint32)
+    pv = (
+        jnp.int32(pad_base)
+        + jax.lax.broadcasted_iota(jnp.int32, (r, extra), 0) * extra
+        + jax.lax.broadcasted_iota(jnp.int32, (r, extra), 1)
+    )
+    keys = jnp.concatenate([keys, pk], axis=1)
+    vals = jnp.concatenate([vals, pv], axis=1)
+    return keys, vals, pad_base + r * extra
+
+
+def _direct_sort(keys, vals, cfg, pad_base):
+    """Single-tile bitonic sort of each row (rows, L), L <= direct_max."""
+    r, length = keys.shape
+    lp = next_pow2(length)
+    keys, vals, pad_base = _pad_cols(keys, vals, lp, pad_base)
+    sk, sv = ops.sort_tiles(keys, vals, impl=cfg.impl, interpret=cfg.interpret)
+    return sk[:, :length], sv[:, :length], pad_base
+
+
+def _sort_rows(keys, vals, cfg: SortConfig, pad_base: int, stats: list | None):
+    """Sort each row of (rows, L) canonical uint32 keys / int32 payloads.
+
+    Returns (sorted_keys, sorted_vals, pad_base) with dense sorted rows of
+    the input shape.  Static recursion: every shape is trace-time known;
+    ``pad_base`` is a trace-time python int.
+    """
+    r, length = keys.shape
+    if length <= cfg.direct_max:
+        return _direct_sort(keys, vals, cfg, pad_base)
+
+    t, sper = cfg.tile, cfg.s
+    lp = round_up(length, t)
+    keys, vals, pad_base = _pad_cols(keys, vals, lp, pad_base)
+    m = lp // t
+
+    # Steps 1-2: local tile sort.
+    tk = keys.reshape(r * m, t)
+    tv = vals.reshape(r * m, t)
+    tk, tv = ops.sort_tiles(tk, tv, impl=cfg.impl, interpret=cfg.interpret)
+
+    # Step 3: s equidistant samples per tile (positions (j+1)*T/s - 1).
+    samp_idx = (jnp.arange(1, sper + 1, dtype=jnp.int32) * (t // sper)) - 1
+    samples_k = tk[:, samp_idx].reshape(r, m * sper)
+    samples_v = tv[:, samp_idx].reshape(r, m * sper)
+
+    # Step 4: sort all samples (recursive; sample array is L*s/T << L).
+    ssk, ssv, pad_base = _sort_rows(samples_k, samples_v, cfg, pad_base, None)
+
+    # Step 5: s_round - 1 equidistant global splitters.
+    s_round = min(max(next_pow2(-(-2 * lp // t)), 2), sper)
+    total_samples = m * sper
+    sp_idx = (jnp.arange(1, s_round, dtype=jnp.int32) * total_samples) // s_round
+    spk = ssk[:, sp_idx]  # (r, s_round-1)
+    spv = ssv[:, sp_idx]
+
+    # Step 6: rank of each splitter in each tile (per-tile splitter rows).
+    spk_t = jnp.repeat(spk, m, axis=0)  # (r*m, s_round-1)
+    spv_t = jnp.repeat(spv, m, axis=0)
+    ranks = ops.splitter_ranks(
+        tk, tv, spk_t, spv_t, impl=cfg.impl, interpret=cfg.interpret
+    )  # (r*m, s_round-1), values in [0, T]
+
+    # Bucket capacity: regular-sampling bound (see module docstring).
+    cap = round_up(lp // s_round + lp // sper, 128)
+
+    # Step 7: prefix sums.  counts[i, j] = size of bucket j in tile i.
+    zeros = jnp.zeros((r * m, 1), jnp.int32)
+    starts = jnp.concatenate([zeros, ranks], axis=1)  # (r*m, s_round)
+    ends = jnp.concatenate([ranks, jnp.full((r * m, 1), t, jnp.int32)], axis=1)
+    counts = (ends - starts).reshape(r, m, s_round)
+    # offset of tile i's chunk within bucket j of its row (exclusive cumsum):
+    tile_off = jnp.cumsum(counts, axis=1) - counts  # (r, m, s_round)
+    totals = counts.sum(axis=1)  # (r, s_round) true bucket fills
+
+    # Step 8: relocation — one scatter into the dense bucket array.
+    pos = jax.lax.broadcasted_iota(jnp.int32, (r * m, t), 1)
+    ind = jnp.zeros((r * m, t + 1), jnp.int32)
+    ind = ind.at[
+        jax.lax.broadcasted_iota(jnp.int32, ranks.shape, 0), ranks
+    ].add(1)
+    bucket_id = jnp.cumsum(ind, axis=1)[:, :t]  # (r*m, T) in [0, s_round-1]
+    p_rel = pos - jnp.take_along_axis(starts, bucket_id, axis=1)
+    within = (
+        jnp.take_along_axis(tile_off.reshape(r * m, s_round), bucket_id, axis=1)
+        + p_rel
+    )
+    row_id = jax.lax.broadcasted_iota(jnp.int32, (r * m, t), 0) // m
+    dest = (row_id * s_round + bucket_id) * cap + within
+    # The capacity bound guarantees within < cap; tests assert no drops.
+    dest = jnp.where(within < cap, dest, r * s_round * cap)
+
+    nbuf = r * s_round * cap
+    bk = jnp.full((nbuf,), _MAXU, jnp.uint32)
+    bv = jnp.int32(pad_base) + jax.lax.broadcasted_iota(jnp.int32, (nbuf,), 0)
+    bk = bk.at[dest.reshape(-1)].set(tk.reshape(-1), mode="drop")
+    bv = bv.at[dest.reshape(-1)].set(tv.reshape(-1), mode="drop")
+    pad_base += nbuf
+
+    if stats is not None:
+        stats.append(
+            dict(
+                level_len=lp,
+                s_round=s_round,
+                capacity=cap,
+                totals=totals,
+                max_within=jnp.max(within),
+            )
+        )
+
+    # Step 9: sort every bucket row (recursion), then compact to dense rows.
+    ck, cv, pad_base = _sort_rows(
+        bk.reshape(r * s_round, cap),
+        bv.reshape(r * s_round, cap),
+        cfg,
+        pad_base,
+        stats,
+    )
+
+    # Compaction: first totals[q, j] entries of bucket row (q, j) are exactly
+    # the elements this level scattered there (fresh pads sort after them).
+    bucket_off = jnp.cumsum(totals, axis=1) - totals  # (r, s_round) excl.
+    p = jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 1)
+    valid = p < totals.reshape(r * s_round, 1)
+    drow = jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 0) // s_round
+    dcol = bucket_off.reshape(r * s_round, 1) + p
+    dflat = jnp.where(valid, drow * lp + dcol, r * lp)
+    ok = jnp.full((r * lp,), _MAXU, jnp.uint32)
+    ov = jnp.full((r * lp,), jnp.int32(_INT_MAX))
+    ok = ok.at[dflat.reshape(-1)].set(ck.reshape(-1), mode="drop")
+    ov = ov.at[dflat.reshape(-1)].set(cv.reshape(-1), mode="drop")
+    return ok.reshape(r, lp)[:, :length], ov.reshape(r, lp)[:, :length], pad_base
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "with_stats"))
+def _sort_canonical(keys_u32, cfg: SortConfig, with_stats: bool = False):
+    (n,) = keys_u32.shape
+    vals = jnp.arange(n, dtype=jnp.int32)
+    stats: list | None = [] if with_stats else None
+    sk, sv, pad_base = _sort_rows(keys_u32[None, :], vals[None, :], cfg, n, stats)
+    assert pad_base < _INT_MAX, (
+        f"pad payload budget exhausted ({pad_base}); reduce n or raise s/tile"
+    )
+    if with_stats:
+        return sk[0], sv[0], stats
+    return sk[0], sv[0]
+
+
+def sort(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
+    """Deterministic sample sort of a 1-D array (ascending, total order)."""
+    if keys.shape[0] <= 1:
+        return keys
+    u = ops.to_sortable(keys)
+    su, _ = _sort_canonical(u, cfg)
+    return ops.from_sortable(su, keys.dtype)
+
+
+def argsort(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
+    """Stable argsort via deterministic sample sort."""
+    if keys.shape[0] <= 1:
+        return jnp.arange(keys.shape[0], dtype=jnp.int32)
+    u = ops.to_sortable(keys)
+    _, perm = _sort_canonical(u, cfg)
+    return perm
+
+
+def sort_kv(keys: jax.Array, values: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
+    """Stable (keys, values) sort by keys.  values: any array, leading dim n."""
+    assert keys.ndim == 1 and values.shape[0] == keys.shape[0]
+    n = keys.shape[0]
+    if n <= 1:
+        return keys, values
+    u = ops.to_sortable(keys)
+    su, perm = _sort_canonical(u, cfg)
+    return ops.from_sortable(su, keys.dtype), jnp.take(values, perm, axis=0)
+
+
+def sort_with_stats(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
+    """Sort + per-round stats (capacities, bucket fills) for bound tests."""
+    u = ops.to_sortable(keys)
+    su, perm, stats = _sort_canonical(u, cfg, with_stats=True)
+    return ops.from_sortable(su, keys.dtype), perm, stats

@@ -1,0 +1,246 @@
+"""Distributed deterministic sample sort across a TPU mesh (shard_map).
+
+The paper is single-GPU; this module scales Algorithm 1 to chips/pods.
+It is the cluster-level analogue of the paper's bucket phase, with one
+extra "deal" round that restores the *guaranteed-capacity* property at
+per-device-pair granularity — the property that makes the exchange a
+single STATIC ``lax.all_to_all`` (XLA requires static shapes; a
+randomized splitter choice admits no such bound — DESIGN.md §2).
+
+Per-shard pipeline (axis size D, local length n_loc, oversample c):
+
+  1. local sort            (Algorithm 1 on the shard)
+  2. DEAL: element p of the local sorted run goes to device (p mod D)
+     via a static all_to_all transpose.  Afterwards every device holds a
+     stride-D regular sample of *every* device's sorted data.
+  3. local sort of the dealt data
+  4. sampling: s_loc = c*D equidistant local samples, all_gather,
+     replicated sort, D-1 equidistant global splitters  (steps 3-5)
+  5. splitter ranks -> per-target chunk sizes            (steps 6-7)
+  6. one static all_to_all of (D, C_pair) buckets        (step 8)
+  7. local sort of received buckets                      (step 9)
+
+Capacity guarantee: global bucket t holds B_t <= n_loc * (1 + 1/c)
+elements (regular sampling, unique (key, payload) pairs).  The deal
+makes every device hold (b_it/D ± 1) of source i's bucket-t elements, so
+
+    chunk(j -> t) <= B_t/D + D  <=  n_loc*(1+1/c)/D + D  =: C_pair  (static!)
+
+Overflow is therefore impossible; tests assert max fill <= C_pair.
+The result is returned padded-ragged: (out_cap,) keys/payloads per
+shard plus a valid-count — the natural output of a sample sort (global
+order = concatenation of valid prefixes in device order).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.bucket_sort import _sort_rows
+from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, round_up
+from repro.kernels import ops
+
+_MAXU = jnp.uint32(0xFFFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistSortSpec:
+    """Static geometry of a distributed sort (all trace-time ints)."""
+
+    axis: str | tuple[str, ...]
+    d: int  # devices along the sort axis
+    n_local: int  # local shard length (pre-padding)
+    oversample: int = 8
+
+    @property
+    def axis_tuple(self):
+        return (self.axis,) if isinstance(self.axis, str) else tuple(self.axis)
+
+    @property
+    def s_loc(self) -> int:
+        return self.oversample * self.d
+
+    @property
+    def n_pad(self) -> int:
+        # Padded so the deal (multiple of d) and the equidistant sampling
+        # (multiple of s_loc = oversample*d) are both exact — exact spacing
+        # is what the capacity-bound proof relies on.
+        return round_up(self.n_local, self.s_loc)
+
+    @property
+    def b_t(self) -> int:
+        """Max global bucket size: B_t <= n_pad * (1 + 1/oversample)."""
+        return self.n_pad + self.n_pad // self.oversample
+
+    @property
+    def c_pair(self) -> int:
+        """Static per-pair all_to_all capacity: B_t/D + D (deal bound)."""
+        return round_up(-(-self.b_t // self.d) + self.d, 8)
+
+    @property
+    def out_cap(self) -> int:
+        """Static per-shard output capacity >= any bucket total B_t."""
+        return min(round_up(self.b_t, 8), self.d * self.c_pair)
+
+
+def _local_sort(k, v, cfg, pad_base):
+    sk, sv, _ = _sort_rows(k[None, :], v[None, :], cfg, pad_base, None)
+    return sk[0], sv[0]
+
+
+def sorted_shard(
+    keys_local: jax.Array,
+    vals_local: jax.Array,
+    spec: DistSortSpec,
+    cfg: SortConfig = DEFAULT_CONFIG,
+):
+    """Distributed sort body — call INSIDE shard_map over ``spec.axis``.
+
+    keys_local: (n_local,) canonical uint32; vals_local: (n_local,) int32,
+    globally unique (use global indices).  Returns (keys (out_cap,),
+    vals (out_cap,), count ()) — valid prefix of each shard; shards
+    concatenated in device order form the globally sorted sequence.
+    """
+    ax = spec.axis
+    d, n_pad, s_loc, c_pair = spec.d, spec.n_pad, spec.s_loc, spec.c_pair
+    n_glob = n_pad * d
+    pad_base = n_glob  # payloads are global indices < n_glob
+
+    me = jax.lax.axis_index(ax)
+    # Pad shard to a multiple of D with unique (MAXU, >= n_glob) pads.
+    n0 = keys_local.shape[0]
+    pad_n = n_pad - n0
+    if pad_n:
+        pk = jnp.full((pad_n,), _MAXU, jnp.uint32)
+        pv = n_glob + me * pad_n + jnp.arange(pad_n, dtype=jnp.int32)
+        keys_local = jnp.concatenate([keys_local, pk])
+        vals_local = jnp.concatenate([vals_local, pv])
+    pad_base += d * n_pad
+
+    # 1. local sort
+    k, v = _local_sort(keys_local, vals_local, cfg, pad_base)
+    pad_base += 4 * n_glob  # disjoint pad range headroom per phase
+
+    # 2. deal: position p -> device p mod D (static transpose all_to_all)
+    k = jnp.swapaxes(k.reshape(n_pad // d, d), 0, 1)  # (D, n_pad/D) strided
+    v = jnp.swapaxes(v.reshape(n_pad // d, d), 0, 1)
+    k = jax.lax.all_to_all(k, ax, split_axis=0, concat_axis=0, tiled=False)
+    v = jax.lax.all_to_all(v, ax, split_axis=0, concat_axis=0, tiled=False)
+
+    # 3. local sort of dealt data
+    k, v = _local_sort(k.reshape(n_pad), v.reshape(n_pad), cfg, pad_base)
+    pad_base += 4 * n_glob
+
+    # 4. sampling -> replicated splitters (steps 3-5 of Algorithm 1)
+    samp_idx = (jnp.arange(1, s_loc + 1, dtype=jnp.int32) * (n_pad // s_loc)) - 1
+    sk_all = jax.lax.all_gather(k[samp_idx], ax).reshape(d * s_loc)
+    sv_all = jax.lax.all_gather(v[samp_idx], ax).reshape(d * s_loc)
+    ssk, ssv = _local_sort(sk_all, sv_all, cfg, pad_base)
+    pad_base += 4 * d * s_loc
+    sp_idx = (jnp.arange(1, d, dtype=jnp.int32) * (d * s_loc)) // d
+    spk, spv = ssk[sp_idx], ssv[sp_idx]  # (D-1,) identical on every device
+
+    # 5. splitter ranks -> chunk geometry (steps 6-7)
+    ranks = ops.splitter_ranks(
+        k[None, :], v[None, :], spk[None, :], spv[None, :],
+        impl=cfg.impl, interpret=cfg.interpret,
+    )[0]  # (D-1,) in [0, n_pad]
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), ranks])
+    ends = jnp.concatenate([ranks, jnp.full((1,), n_pad, jnp.int32)])
+    counts = ends - starts  # (D,) elements per target device
+
+    # 6. scatter into the padded (D, C_pair) buffer, one static all_to_all
+    pos = jnp.arange(n_pad, dtype=jnp.int32)
+    ind = jnp.zeros((n_pad + 1,), jnp.int32).at[ranks].add(1)
+    chunk_id = jnp.cumsum(ind)[:n_pad]
+    within = pos - jnp.take(starts, chunk_id)
+    max_within = jnp.max(within)  # bound check: < C_pair (tested)
+    dest = chunk_id * c_pair + within
+    dest = jnp.where(within < c_pair, dest, d * c_pair)
+    bk = jnp.full((d * c_pair,), _MAXU, jnp.uint32).at[dest].set(k, mode="drop")
+    bv = (
+        jnp.int32(pad_base) + jnp.arange(d * c_pair, dtype=jnp.int32)
+    ).at[dest].set(v, mode="drop")
+    pad_base += d * d * c_pair
+
+    bk = jax.lax.all_to_all(
+        bk.reshape(d, c_pair), ax, split_axis=0, concat_axis=0, tiled=False
+    )
+    bv = jax.lax.all_to_all(
+        bv.reshape(d, c_pair), ax, split_axis=0, concat_axis=0, tiled=False
+    )
+    recv_counts = jax.lax.all_to_all(
+        counts.reshape(d, 1), ax, split_axis=0, concat_axis=0, tiled=False
+    ).reshape(d)
+
+    # 7. local sort of the received buckets (step 9); reals sort before pads
+    fk, fv = _local_sort(
+        bk.reshape(d * c_pair), bv.reshape(d * c_pair), cfg, pad_base
+    )
+    out_cap = spec.out_cap
+    count = jnp.sum(recv_counts)
+    # Padded shard elements (payload in [n_glob, n_glob + d*n_pad)) are real
+    # inputs' pads: they sort after all true elements; exclude them.
+    count = count - jnp.sum(
+        (fv[:out_cap] >= n_glob) & (fv[:out_cap] < n_glob + d * n_pad)
+    )
+    return fk[:out_cap], fv[:out_cap], count, max_within
+
+
+def make_sharded_sort(
+    mesh, axis, n_global: int, cfg: SortConfig = DEFAULT_CONFIG,
+    oversample: int = 8,
+):
+    """Build a jit'd distributed argsort over ``axis`` of ``mesh``.
+
+    Returns fn: (keys (n_global,) sharded over axis) ->
+      (sorted_keys (D*out_cap,), payload_idx (D*out_cap,), counts (D,))
+    where the valid prefix of each shard (counts[i] elements) concatenated
+    in shard order is the globally sorted sequence; payloads are original
+    global indices (an argsort).
+    """
+    axt = (axis,) if isinstance(axis, str) else tuple(axis)
+    d = 1
+    for a in axt:
+        d *= mesh.shape[a]
+    assert d >= 2, "use bucket_sort.sort for a single device"
+    assert n_global % d == 0, (n_global, d)
+    assert n_global * 16 < 2**31, "int32 payload budget caps global n at ~2^27"
+    spec = DistSortSpec(axis=axis, d=d, n_local=n_global // d, oversample=oversample)
+
+    def body(keys_local):
+        n_loc = spec.n_local
+        me = jax.lax.axis_index(axis)
+        u = ops.to_sortable(keys_local)
+        gid = me * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
+        fk, fv, count, max_within = sorted_shard(u, gid, spec, cfg)
+        return (
+            fk[None],
+            fv[None],
+            count[None],
+            max_within[None],
+        )
+
+    pspec = P(axt)
+
+    @jax.jit
+    def run(keys):
+        fk, fv, counts, mw = jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(pspec,),
+            out_specs=(P(axt, None), P(axt, None), pspec, pspec),
+        )(keys)
+        return (
+            ops.from_sortable(fk.reshape(-1), keys.dtype),
+            fv.reshape(-1),
+            counts,
+            mw,
+        )
+
+    return run, spec

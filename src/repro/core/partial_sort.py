@@ -1,0 +1,127 @@
+"""Partial deterministic sample sort: top-k of a large array (beyond-paper).
+
+Serving needs top-k / top-p over vocab-sized logits (50k-164k).  A full
+sort wastes work; instead run ONE bucket round of Algorithm 1 (steps
+1-7) to locate a splitter threshold θ whose global rank >= k, gather the
+< k + B candidates below θ (B = the paper's guaranteed bucket capacity —
+that static bound is exactly what makes the candidate buffer static),
+and fully sort only the candidates.
+
+Work: O(n) tile sort + O((k+B) log(k+B))  vs  O(n log n) full sort.
+
+Everything here operates on "smallest-k of canonical uint32 keys";
+``topk`` feeds inverted keys so ties break toward the smaller index,
+matching jax.lax.top_k.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, next_pow2, round_up
+from repro.kernels import ops
+
+_MAXU = jnp.uint32(0xFFFFFFFF)
+_IMAX = jnp.int32(2**31 - 1)
+
+
+def _pad_pow2(k2, v2):
+    r, length = k2.shape
+    lp = next_pow2(length)
+    if lp == length:
+        return k2, v2
+    pk = jnp.full((r, lp - length), _MAXU, jnp.uint32)
+    pv = jnp.full((r, lp - length), _IMAX, jnp.int32)
+    return jnp.concatenate([k2, pk], 1), jnp.concatenate([v2, pv], 1)
+
+
+def _sort_small(k1, v1, cfg):
+    """Bitonic sort of a single row (pads with (MAXU, IMAX) go last)."""
+    n = k1.shape[0]
+    sk, sv = ops.sort_tiles(
+        *_pad_pow2(k1[None], v1[None]), impl=cfg.impl, interpret=cfg.interpret
+    )
+    return sk[0, :n], sv[0, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg"))
+def _smallest_k(u, k: int, cfg: SortConfig):
+    """Ascending smallest-k of canonical keys; payload = original index."""
+    (n,) = u.shape
+    t, s = cfg.tile, cfg.s
+    lp = round_up(n, t)
+    vals = jnp.arange(n, dtype=jnp.int32)
+    if lp > n:  # pad with MAX pairs: never candidates for smallest-k
+        u = jnp.concatenate([u, jnp.full((lp - n,), _MAXU, jnp.uint32)])
+        vals = jnp.concatenate([vals, jnp.full((lp - n,), _IMAX, jnp.int32)])
+    m = lp // t
+
+    # steps 1-2: tile sort
+    tk, tv = ops.sort_tiles(
+        u.reshape(m, t), vals.reshape(m, t), impl=cfg.impl, interpret=cfg.interpret
+    )
+
+    # steps 3-5: samples -> sorted samples -> s-1 splitters
+    samp_idx = (jnp.arange(1, s + 1, dtype=jnp.int32) * (t // s)) - 1
+    sk, sv = _sort_small(
+        tk[:, samp_idx].reshape(m * s), tv[:, samp_idx].reshape(m * s), cfg
+    )
+    sp_idx = (jnp.arange(1, s, dtype=jnp.int32) * (m * s)) // s
+    spk = jnp.broadcast_to(sk[sp_idx], (m, s - 1))
+    spv = jnp.broadcast_to(sv[sp_idx], (m, s - 1))
+
+    # step 6: ranks
+    ranks = ops.splitter_ranks(
+        tk, tv, spk, spv, impl=cfg.impl, interpret=cfg.interpret
+    )  # (m, s-1)
+    glob_ranks = ranks.sum(axis=0)  # (s-1,)
+
+    # θ = smallest splitter with global rank >= k; candidates = elements < θ.
+    # Bucket bound: candidate count < k + cap.  If no splitter qualifies,
+    # the last bucket alone exceeds lp - k, hence cap > lp - k and the
+    # static capacity below already covers taking ALL elements.
+    cap = round_up(2 * lp // s, 128)
+    ccap = round_up(min(k + cap, lp), 128)
+    qualifies = glob_ranks >= k  # monotone
+    any_q = jnp.any(qualifies)
+    theta = jnp.argmax(qualifies).astype(jnp.int32)  # first True (or 0)
+    tile_rank = jnp.where(
+        any_q,
+        jnp.take_along_axis(
+            ranks, jnp.broadcast_to(theta[None, None], (m, 1)), axis=1
+        )[:, 0],
+        jnp.full((m,), t, jnp.int32),
+    )  # (m,) elements of tile i below θ (or all)
+
+    # candidate gather: global candidate slot = (#cands in earlier tiles) + pos
+    tile_excl = jnp.cumsum(tile_rank) - tile_rank
+    pos = jax.lax.broadcasted_iota(jnp.int32, (m, t), 1)
+    is_cand = pos < tile_rank[:, None]
+    within = tile_excl[:, None] + pos
+    dest = jnp.where(is_cand & (within < ccap), within, ccap)
+    ck = jnp.full((ccap + 1,), _MAXU, jnp.uint32)
+    cv = jnp.full((ccap + 1,), _IMAX, jnp.int32)
+    ck = ck.at[dest.reshape(-1)].set(tk.reshape(-1), mode="drop")[:ccap]
+    cv = cv.at[dest.reshape(-1)].set(tv.reshape(-1), mode="drop")[:ccap]
+
+    fk, fv = _sort_small(ck, cv, cfg)
+    return fk[:k], fv[:k]
+
+
+def topk(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
+    """Top-k (descending) values + original indices of 1-D x.
+
+    Ties break toward the smaller index (matches jax.lax.top_k).
+    """
+    n = x.shape[0]
+    assert 1 <= k <= n
+    u = ~ops.to_sortable(x)  # ascending u == descending x
+    if n <= cfg.direct_max:
+        fk, fv = _sort_small(u, jnp.arange(n, dtype=jnp.int32), cfg)
+        fk, fv = fk[:k], fv[:k]
+    else:
+        fk, fv = _smallest_k(u, k, cfg)
+    return ops.from_sortable(~fk, x.dtype), fv

@@ -1,0 +1,49 @@
+"""Configuration for the deterministic sample sort (GPU BUCKET SORT on TPU)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+def next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class SortConfig:
+    """Knobs of Algorithm 1, adapted to TPU.
+
+    tile: VMEM tile size T (paper: n/m = 2K items per SM shared memory).
+        Power of two; multiple of 128 for lane alignment on real TPU.
+    s: samples per tile == max buckets per round (paper: s = 64, Fig. 3).
+    direct_max: arrays up to this length are bitonic-sorted directly in a
+        single tile instead of going through a bucket round.
+    impl: "pallas" (kernels) | "xla" (pure-jnp reference path) | None=auto.
+    interpret: Pallas interpret mode (None = auto: True off-TPU).
+    """
+
+    tile: int = 4096
+    s: int = 64
+    direct_max: int = 8192
+    impl: str | None = None
+    interpret: bool | None = None
+
+    def __post_init__(self):
+        assert self.tile >= 2 and self.tile & (self.tile - 1) == 0, self.tile
+        assert self.s >= 2 and self.s & (self.s - 1) == 0, self.s
+        assert self.s <= self.tile and self.tile % self.s == 0
+        assert self.direct_max >= self.tile
+        assert self.impl in (None, "pallas", "xla")
+
+
+# Paper default: s = 64 (Fig. 3 sweep), 2K-item tiles on 16KB shared memory.
+# TPU default: larger VMEM => larger tiles.
+PAPER_CONFIG = SortConfig(tile=2048, s=64, direct_max=4096)
+DEFAULT_CONFIG = SortConfig()

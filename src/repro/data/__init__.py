@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataLoader, MemmapDataset, SyntheticDataset
+
+__all__ = ["DataLoader", "MemmapDataset", "SyntheticDataset"]

@@ -1,0 +1,100 @@
+"""Data pipeline: deterministic synthetic stream + memmap shards + loader.
+
+Production properties:
+  * deterministic & seekable — batch(step) is a pure function of (seed,
+    step, shard), so restart-from-checkpoint replays the exact stream
+    (no state files needed);
+  * per-host sharding — each process reads only its data-parallel slice;
+  * background prefetch — a double-buffered thread hides host latency.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+
+class SyntheticDataset:
+    """Deterministic hash-based token stream (infinite, seekable).
+
+    tokens[step, i] = splitmix64(seed, step, i) % vocab — cheap,
+    reproducible, and non-degenerate for throughput/loss smoke tests.
+    """
+
+    def __init__(self, vocab: int, seq_len: int, batch: int, seed: int = 0):
+        self.vocab, self.seq_len, self.batch, self.seed = vocab, seq_len, batch, seed
+
+    def _splitmix(self, x: np.ndarray) -> np.ndarray:
+        x = (x + np.uint64(0x9E3779B97F4A7C15)) * np.uint64(0xBF58476D1CE4E5B9)
+        x ^= x >> np.uint64(27)
+        x *= np.uint64(0x94D049BB133111EB)
+        x ^= x >> np.uint64(31)
+        return x
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        n = self.batch * (self.seq_len + 1)
+        base = np.uint64(self.seed) * np.uint64(0x100000001B3) + np.uint64(step)
+        idx = np.arange(n, dtype=np.uint64) + base * np.uint64(n)
+        toks = (self._splitmix(idx) % np.uint64(self.vocab)).astype(np.int32)
+        toks = toks.reshape(self.batch, self.seq_len + 1)
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+class MemmapDataset:
+    """Flat binary token file (int32), read as (batch, seq+1) windows.
+
+    Seekable: window offsets derive from (step, shard_idx, n_shards).
+    """
+
+    def __init__(self, path: str, seq_len: int, batch: int,
+                 shard_idx: int = 0, n_shards: int = 1):
+        self.tokens = np.memmap(path, dtype=np.int32, mode="r")
+        self.seq_len, self.batch = seq_len, batch
+        self.shard_idx, self.n_shards = shard_idx, n_shards
+        self.n_windows = len(self.tokens) // (seq_len + 1)
+        assert self.n_windows >= batch * n_shards, "file too small"
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        w = self.seq_len + 1
+        rows = []
+        for i in range(self.batch):
+            j = (step * self.batch * self.n_shards
+                 + self.shard_idx * self.batch + i) % self.n_windows
+            rows.append(np.asarray(self.tokens[j * w:(j + 1) * w]))
+        toks = np.stack(rows)
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+class DataLoader:
+    """Background-prefetching iterator over a seekable dataset."""
+
+    def __init__(self, dataset, start_step: int = 0, prefetch: int = 2):
+        self.dataset = dataset
+        self.step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        s = self.step
+        while not self._stop.is_set():
+            try:
+                self._q.put((s, self.dataset.batch_at(s)), timeout=0.2)
+                s += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        s, b = self._q.get()
+        self.step = s + 1
+        return b
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=2)

@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: bitonic (key, value) sort of VMEM-resident tiles.
+
+This is the TPU adaptation of Steps 2/4/9 of GPU BUCKET SORT (Dehne &
+Zaboli 2010).  The paper sorts 2K-item sublists per SM in shared memory
+with a bitonic network because it is branch-free and SIMD-perfect; the
+same argument holds on the TPU VPU: every compare-exchange pass is a
+reshape + vectorized min/max/select with *no* data-dependent control
+flow, so the whole network lowers to straight-line vector code.
+
+Layout notes (target = TPU v5e):
+  * One grid program sorts one tile of ``tile`` keys+values held in VMEM.
+  * ``tile`` must be a power of two and a multiple of 128 (lane width)
+    so the (nb, 2, d) reshapes stay lane-aligned for d >= 128.  Strides
+    d < 128 become intra-lane shuffles; Mosaic handles them, and a
+    production-tuned variant would switch to sublane rotates there —
+    that is a lowering detail, not an algorithmic one.
+  * Comparison is LEXICOGRAPHIC on (key, value).  The caller passes the
+    original element index as the value, which (a) makes every compared
+    pair unique so the regular-sampling bucket bound ≤ 2n/s holds for
+    any duplicate distribution, and (b) makes the sort STABLE.
+
+Keys are canonical uint32 (see ``ops.to_sortable``); values are int32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(keys, vals, d: int, size: int):
+    """One bitonic compare-exchange pass at stride ``d`` within ``size`` blocks.
+
+    keys/vals: 1-D arrays of length T (power of two).  Element i is paired
+    with i ^ d; direction is ascending iff (i & size) == 0.
+    """
+    t = keys.shape[0]
+    nb = t // (2 * d)
+    k3 = keys.reshape(nb, 2, d)
+    v3 = vals.reshape(nb, 2, d)
+    # Global index of the low element of block b is 2*b*d (+ lane offset < d),
+    # and d <= size/2, so bit log2(size) is decided purely by the block id.
+    blk = jax.lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
+    asc = ((2 * blk * d) & size) == 0  # (nb, 1) bool
+
+    klo, khi = k3[:, 0, :], k3[:, 1, :]
+    vlo, vhi = v3[:, 0, :], v3[:, 1, :]
+    gt = (klo > khi) | ((klo == khi) & (vlo > vhi))  # lexicographic
+    swap = jnp.where(asc, gt, ~gt)
+
+    nk_lo = jnp.where(swap, khi, klo)
+    nk_hi = jnp.where(swap, klo, khi)
+    nv_lo = jnp.where(swap, vhi, vlo)
+    nv_hi = jnp.where(swap, vlo, vhi)
+
+    keys = jnp.stack((nk_lo, nk_hi), axis=1).reshape(t)
+    vals = jnp.stack((nv_lo, nv_hi), axis=1).reshape(t)
+    return keys, vals
+
+
+def bitonic_network(keys, vals):
+    """Full bitonic sorting network on 1-D (keys, vals); T = power of two.
+
+    Unrolled at trace time: log2(T)*(log2(T)+1)/2 vectorized passes.
+    Shared by the Pallas kernel body and the pure-jnp reference path.
+    """
+    t = keys.shape[0]
+    assert t & (t - 1) == 0, f"tile size {t} must be a power of two"
+    size = 2
+    while size <= t:
+        d = size // 2
+        while d >= 1:
+            keys, vals = _compare_exchange(keys, vals, d, size)
+            d //= 2
+        size *= 2
+    return keys, vals
+
+
+def _bitonic_kernel(k_ref, v_ref, ko_ref, vo_ref):
+    keys = k_ref[0, :]
+    vals = v_ref[0, :]
+    keys, vals = bitonic_network(keys, vals)
+    ko_ref[0, :] = keys
+    vo_ref[0, :] = vals
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_tiles_kv(keys: jax.Array, vals: jax.Array, *, interpret: bool = True):
+    """Sort each row of (m, T) keys/vals independently, lexicographically.
+
+    keys: uint32 canonical sort keys, shape (m, T), T a power of two.
+    vals: int32 payload (original indices for stability), same shape.
+    Returns (sorted_keys, sorted_vals), each row ascending.
+    """
+    m, t = keys.shape
+    assert vals.shape == (m, t)
+    assert keys.dtype == jnp.uint32 and vals.dtype == jnp.int32
+    grid = (m,)
+    blk_in = pl.BlockSpec((1, t), lambda i: (i, 0))
+    return pl.pallas_call(
+        _bitonic_kernel,
+        grid=grid,
+        in_specs=[blk_in, blk_in],
+        out_specs=[blk_in, blk_in],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, t), jnp.uint32),
+            jax.ShapeDtypeStruct((m, t), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys, vals)
+
+
+# --- Row-wise bitonic along the last axis (used by the top-k kernel and the
+# --- pure-jnp tile path, where many independent rows are sorted at once).
+
+
+def _row_compare_exchange(keys, vals, d: int, size: int):
+    """Compare-exchange along the LAST axis of (..., C) arrays."""
+    c = keys.shape[-1]
+    lead = keys.shape[:-1]
+    nb = c // (2 * d)
+    k3 = keys.reshape(lead + (nb, 2, d))
+    v3 = vals.reshape(lead + (nb, 2, d))
+    blk = jax.lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
+    asc = ((2 * blk * d) & size) == 0  # (nb, 1), broadcasts over leading dims
+
+    klo, khi = k3[..., 0, :], k3[..., 1, :]
+    vlo, vhi = v3[..., 0, :], v3[..., 1, :]
+    gt = (klo > khi) | ((klo == khi) & (vlo > vhi))
+    swap = jnp.where(asc, gt, ~gt)
+
+    nk = jnp.stack(
+        (jnp.where(swap, khi, klo), jnp.where(swap, klo, khi)), axis=-2
+    ).reshape(lead + (c,))
+    nv = jnp.stack(
+        (jnp.where(swap, vhi, vlo), jnp.where(swap, vlo, vhi)), axis=-2
+    ).reshape(lead + (c,))
+    return nk, nv
+
+
+def bitonic_network_rows(keys, vals):
+    """Bitonic sort along the last axis of (..., C); C = power of two."""
+    c = keys.shape[-1]
+    assert c & (c - 1) == 0, f"row width {c} must be a power of two"
+    size = 2
+    while size <= c:
+        d = size // 2
+        while d >= 1:
+            keys, vals = _row_compare_exchange(keys, vals, d, size)
+            d //= 2
+        size *= 2
+    return keys, vals

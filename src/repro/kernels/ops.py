@@ -1,0 +1,132 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Handles: dtype canonicalization to totally-ordered uint32 sort keys,
+pallas-vs-xla implementation dispatch, and interpret-mode selection
+(Pallas kernels run interpret=True on the CPU container, natively on TPU).
+
+Canonical key transform (the classic radix trick):
+  int32   -> bitcast ^ 0x8000_0000                  (INT_MIN -> 0)
+  uint32  -> identity
+  float32 -> bitcast; if sign bit: ~u else u | 0x8000_0000
+             (total order: -NaN < -inf < ... < -0 < +0 < ... < +inf < +NaN)
+  bf16/f16 -> upcast to f32 first (order-preserving).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitonic as _bitonic
+from repro.kernels import ref as _ref
+from repro.kernels import splitter as _splitter
+from repro.kernels import topk as _topk
+
+_SIGN = jnp.uint32(0x80000000)
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: emulate on CPU, native on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def default_impl() -> str:
+    env = os.environ.get("REPRO_SORT_IMPL")
+    if env in ("pallas", "xla"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def to_sortable(x: jax.Array) -> jax.Array:
+    """Map x to uint32 whose unsigned order == the natural order of x."""
+    dt = x.dtype
+    if dt in (jnp.bfloat16, jnp.float16):
+        x = x.astype(jnp.float32)
+        dt = jnp.dtype(jnp.float32)
+    if dt == jnp.uint32:
+        return x
+    if dt == jnp.int32:
+        return jax.lax.bitcast_convert_type(x, jnp.uint32) ^ _SIGN
+    if dt == jnp.float32:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+        return jnp.where((u & _SIGN) != 0, ~u, u | _SIGN)
+    raise TypeError(f"unsupported sort key dtype {dt}")
+
+
+def from_sortable(u: jax.Array, dtype) -> jax.Array:
+    """Inverse of to_sortable (into int32/uint32/float32)."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.uint32:
+        return u
+    if dtype == jnp.int32:
+        return jax.lax.bitcast_convert_type(u ^ _SIGN, jnp.int32)
+    if dtype in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+        f = jnp.where((u & _SIGN) != 0, u & ~_SIGN, ~u)
+        f32 = jax.lax.bitcast_convert_type(f, jnp.float32)
+        return f32.astype(dtype)
+    raise TypeError(f"unsupported sort key dtype {dtype}")
+
+
+def sort_tiles(
+    keys: jax.Array,
+    vals: jax.Array,
+    *,
+    impl: str | None = None,
+    interpret: bool | None = None,
+):
+    """Sort each row of (m, T) canonical-uint32 keys (+int32 payload)."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        interpret = default_interpret() if interpret is None else interpret
+        return _bitonic.sort_tiles_kv(keys, vals, interpret=interpret)
+    return _ref.sort_tiles_kv(keys, vals)
+
+
+def splitter_ranks(
+    keys, vals, sp_keys, sp_vals, *, impl: str | None = None,
+    interpret: bool | None = None,
+):
+    """(m, S) rank of each splitter in each tile (canonical uint32 keys)."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        interpret = default_interpret() if interpret is None else interpret
+        return _splitter.splitter_ranks(
+            keys, vals, sp_keys, sp_vals, interpret=interpret
+        )
+    return _ref.splitter_ranks(keys, vals, sp_keys, sp_vals)
+
+
+def topk(
+    x: jax.Array,
+    k: int,
+    *,
+    impl: str | None = None,
+    interpret: bool | None = None,
+):
+    """Row-wise top-k (descending) of (R, C) scores; C a power of two.
+
+    Returns (values (R, k) in x.dtype, indices (R, k) int32); ties toward
+    the smaller index, matching jax.lax.top_k.
+    """
+    impl = impl or default_impl()
+    orig_dtype = x.dtype
+    u = ~to_sortable(x)  # ascending canonical == descending score
+    r, c = u.shape
+    if impl == "pallas":
+        interpret = default_interpret() if interpret is None else interpret
+        block_rows = _pick_block_rows(r)
+        tk, ti = _topk.topk_desc(
+            u, k=k, block_rows=block_rows, interpret=interpret
+        )
+    else:
+        tk, ti = _ref.topk_desc(u, k=k)
+    return from_sortable(~tk, orig_dtype), ti
+
+
+def _pick_block_rows(r: int) -> int:
+    for b in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if r % b == 0:
+            return b
+    return 1

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the ground truth the kernels are validated against in tests
+(interpret=True vs ref, swept over shapes/dtypes + hypothesis).  They are
+also the implementation used on the ``impl="xla"`` path (dry-run compiles
+with 512 host devices, where emulated Pallas would bloat the HLO).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sort_tiles_kv(keys: jax.Array, vals: jax.Array):
+    """Lexicographic (key, value) ascending sort of each row of (m, T)."""
+    return jax.lax.sort((keys, vals), dimension=-1, num_keys=2)
+
+
+def splitter_ranks(keys, vals, sp_keys, sp_vals):
+    """(m, S) ranks: # elements of tile i lexicographically < splitter (i, j).
+
+    keys/vals: (m, T) tiles; sp_keys/sp_vals: (m, S) per-tile splitters.
+    """
+    lt = (keys[:, :, None] < sp_keys[:, None, :]) | (
+        (keys[:, :, None] == sp_keys[:, None, :])
+        & (vals[:, :, None] < sp_vals[:, None, :])
+    )
+    return jnp.sum(lt.astype(jnp.int32), axis=1)
+
+
+def topk_desc(keys: jax.Array, *, k: int):
+    """Row-wise smallest-k of canonical uint32 keys (== top-k scores).
+
+    Matches kernels.topk.topk_desc: ties toward smaller column index.
+    """
+    r, c = keys.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (r, c), 1)
+    sk, si = jax.lax.sort((keys, idx), dimension=-1, num_keys=2)
+    return sk[:, :k], si[:, :k]

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: row-wise bitonic top-k (MoE router / sampling).
+
+Sorts each row of an (R, C) score matrix descending with a bitonic
+network along the lane axis and emits the first k columns.  C is the
+number of experts (64 / 128 for the assigned MoE archs) — small enough
+that a full row sort is cheaper than iterative max-extraction, and the
+bitonic network is branch-free (same rationale as the paper's Step 2).
+
+Ties broken toward the smaller column index (matches jax.lax.top_k).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitonic import bitonic_network_rows
+
+
+def _topk_kernel(k_ref, ko_ref, io_ref, *, kk: int):
+    keys = k_ref[...]  # (Rb, C) canonical uint32, ascending == descending score
+    rb, c = keys.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (rb, c), 1)
+    keys, idx = bitonic_network_rows(keys, idx)
+    ko_ref[...] = keys[:, :kk]
+    io_ref[...] = idx[:, :kk]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
+def topk_desc(
+    keys: jax.Array, *, k: int, block_rows: int = 256, interpret: bool = True
+):
+    """Top-k per row of (R, C) canonical-uint32 keys where SMALLER canonical
+    value == HIGHER score (caller pre-inverts, see ops.topk).
+
+    Returns (top_keys (R, k) uint32, top_idx (R, k) int32).
+    R must be a multiple of block_rows; C a power of two.
+    """
+    r, c = keys.shape
+    assert keys.dtype == jnp.uint32
+    assert r % block_rows == 0, (r, block_rows)
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, kk=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, k), jnp.uint32),
+            jax.ShapeDtypeStruct((r, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys)

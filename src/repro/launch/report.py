@@ -1,0 +1,114 @@
+"""Generate EXPERIMENTS.md roofline/dry-run tables from results/dryrun.
+
+  PYTHONPATH=src python -m repro.launch.report --dryrun results/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirpath):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.2f}ms"
+
+
+def dryrun_table(cells):
+    rows = ["| arch | shape | mesh | status | bytes/dev (args+tmp) | compile |",
+            "|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        if c.get("tag"):
+            continue
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | SKIP (long_500k "
+                        f"full-attn) | - | - |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                        f"ERROR: {c.get('error','')[:60]} | - | - |")
+            continue
+        mem = c.get("memory", {})
+        args = mem.get("argument_size_in_bytes", 0) / 2**30
+        tmp = mem.get("temp_size_in_bytes", 0) / 2**30
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | OK | "
+            f"{args:.1f}+{tmp:.1f} GiB | {c.get('compile_s','-')}s |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells):
+    rows = ["| arch | shape | compute | memory | collective | bottleneck | "
+            "MODEL_FLOPS/HLO | step LB |",
+            "|---|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        if c["status"] != "ok" or c["mesh"] != "single" or c.get("tag"):
+            continue
+        if "compute_s" not in c:
+            continue
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(c['compute_s'])} | "
+            f"{fmt_s(c['memory_s'])} | {fmt_s(c['collective_s'])} | "
+            f"{c['bottleneck'].replace('_s','')} | "
+            f"{c['useful_flops_ratio']:.2f} | "
+            f"{fmt_s(c['step_time_lower_bound_s'])} |")
+    return "\n".join(rows)
+
+
+def comm_table(cells):
+    rows = ["| arch | shape | all-reduce | all-gather | reduce-scatter | "
+            "all-to-all | permute |",
+            "|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        if c["status"] != "ok" or c["mesh"] != "single" or c.get("tag"):
+            continue
+        k = c.get("comm_by_kind_probe2", {})
+        gb = lambda key: f"{k.get(key,0)/2**20:.1f}M" if k.get(key) else "-"
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {gb('all-reduce')} | "
+            f"{gb('all-gather')} | {gb('reduce-scatter')} | "
+            f"{gb('all-to-all')} | {gb('collective-permute')} |")
+    return "\n".join(rows)
+
+
+def summarize(cells):
+    ok = [c for c in cells if c["status"] == "ok" and not c.get("tag")]
+    skip = [c for c in cells if c["status"] == "skipped"]
+    err = [c for c in cells if c["status"] == "error"]
+    single = [c for c in ok if c["mesh"] == "single"]
+    multi = [c for c in ok if c["mesh"] == "multi"]
+    return (f"{len(ok)} compiled OK ({len(single)} single-pod 16x16=256 chips, "
+            f"{len(multi)} multi-pod 2x16x16=512 chips), {len(skip)} skipped "
+            f"(documented long_500k full-attention skips), {len(err)} errors")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun")
+    args = ap.parse_args()
+    cells = load(args.dryrun)
+    print("## Summary\n")
+    print(summarize(cells), "\n")
+    print("## Dry-run table\n")
+    print(dryrun_table(cells), "\n")
+    print("## Roofline (single-pod, per device)\n")
+    print(roofline_table(cells), "\n")
+    print("## Collective breakdown (2-period probe, bytes)\n")
+    print(comm_table(cells))
+
+
+if __name__ == "__main__":
+    main()

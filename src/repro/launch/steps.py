@@ -1,0 +1,221 @@
+"""Step builders: sharded train / prefill / decode steps for any arch.
+
+Everything here works on abstract inputs (ShapeDtypeStruct with attached
+NamedShardings) so the dry-run can .lower().compile() with zero
+allocation; the same builders drive real training/serving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shd
+from repro.config import (
+    ArchConfig,
+    ModelConfig,
+    OptimizerConfig,
+    ParallelConfig,
+    ShapeConfig,
+)
+from repro.models import api, meta
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_warmup
+
+
+@dataclasses.dataclass
+class Plan:
+    """A fully-resolved (arch x shape x mesh) execution plan."""
+
+    arch: ArchConfig
+    shape: ShapeConfig
+    parallel: ParallelConfig
+    mesh: object
+    rules: list
+
+    @property
+    def model(self) -> ModelConfig:
+        return self.arch.model
+
+    def ns(self, spec) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def batch_spec(self, b: int) -> P:
+        axes = self.parallel.batch_axes
+        n = 1
+        for a in axes:
+            n *= dict(zip(self.parallel.mesh_axes, self.parallel.mesh_shape))[a]
+        return P(axes) if b % n == 0 else P()
+
+
+def make_plan(arch: ArchConfig, shape: ShapeConfig, mesh, parallel: ParallelConfig):
+    rules = shd.default_rules(
+        fsdp=arch.fsdp,
+        batch_axes=parallel.batch_axes,
+        fsdp_axes=parallel.batch_axes if arch.fsdp else ("data",),
+    )
+    return Plan(arch=arch, shape=shape, parallel=parallel, mesh=mesh, rules=rules)
+
+
+# ----------------------------------------------------------- shardings
+def param_shardings(plan: Plan):
+    tpl = api.template(plan.model)
+    specs = meta.param_specs(tpl, plan.rules, dict(plan.mesh.shape))
+    return jax.tree.map(plan.ns, specs)
+
+
+def abstract_params(plan: Plan):
+    tpl = api.template(plan.model)
+    sds = meta.abstract_params(tpl)
+    sh = param_shardings(plan)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s), sds, sh
+    )
+
+
+def abstract_opt_state(plan: Plan, opt: OptimizerConfig):
+    ps = abstract_params(plan)
+    mdt = jnp.dtype(opt.moment_dtype)
+    mom = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, mdt, sharding=a.sharding), ps
+    )
+    return {
+        "m": mom,
+        "v": mom,
+        "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=plan.ns(P())),
+    }
+
+
+def abstract_batch(plan: Plan):
+    m, s = plan.model, plan.shape
+    b = api.make_batch_shapes(m, s.global_batch, s.seq_len)
+    bspec = plan.batch_spec(s.global_batch)
+
+    def att(a, name):
+        spec = P(*bspec, *([None] * (len(a.shape) - len(bspec))))
+        return jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=plan.ns(spec))
+
+    return {k: att(v, k) for k, v in b.items()}
+
+
+def cache_len_for(plan: Plan) -> int:
+    """KV length: seq plus the VLM stub prefix rows (vision tokens live
+    in the same decoder cache)."""
+    m = plan.model
+    extra = m.frontend_len if (m.frontend != "none" and not m.n_encoder_layers) else 0
+    return plan.shape.seq_len + extra
+
+
+def abstract_cache(plan: Plan):
+    m, s = plan.model, plan.shape
+    cache = jax.eval_shape(
+        lambda: api.init_cache(m, s.global_batch, cache_len_for(plan))
+    )
+    axes_tree = api.cache_axes(plan.model)
+    sizes = dict(plan.mesh.shape)
+    is_axes = lambda a: isinstance(a, tuple) and all(
+        isinstance(e, str) or e is None for e in a
+    )
+
+    def mk(axes, arr):
+        spec = shd.resolve(axes, plan.rules, sizes, shape=arr.shape)
+        return jax.ShapeDtypeStruct(arr.shape, arr.dtype, sharding=plan.ns(spec))
+
+    return jax.tree.map(mk, axes_tree, cache, is_leaf=is_axes)
+
+
+def cache_shardings(plan: Plan):
+    return jax.tree.map(lambda a: a.sharding, abstract_cache(plan))
+
+
+# ----------------------------------------------------------- step fns
+def build_train_step(plan: Plan, opt: OptimizerConfig):
+    m = plan.model
+    accum = plan.parallel.grad_accum
+
+    def loss_fn(params, batch):
+        return api.loss_fn(params, batch, m)
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            def micro(carry, mb):
+                g_acc, = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g),), l
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch,
+            )
+            (gsum,), losses = jax.lax.scan(micro, (zeros,), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, opt.grad_clip)
+        lr = cosine_warmup(opt_state["step"], opt.lr, opt.warmup_steps, opt.total_steps)
+        params, opt_state = adamw_update(params, grads, opt_state, opt, lr)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm, "lr": lr}
+
+    return train_step
+
+
+def build_prefill_step(plan: Plan):
+    m = plan.model
+    clen = cache_len_for(plan)
+
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, m, cache_len=clen)
+
+    return prefill_step
+
+
+def build_decode_step(plan: Plan):
+    m = plan.model
+
+    def serve_step(params, token, caches, pos):
+        return api.decode_step(params, token, caches, pos, m)
+
+    return serve_step
+
+
+def abstract_decode_inputs(plan: Plan):
+    b = plan.shape.global_batch
+    tok = jax.ShapeDtypeStruct(
+        (b, 1), jnp.int32,
+        sharding=plan.ns(P(*plan.batch_spec(b), None)),
+    )
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=plan.ns(P()))
+    return tok, abstract_cache(plan), pos
+
+
+# ------------------------------------------------------------ lowering
+def lower_cell(plan: Plan, opt: OptimizerConfig | None = None):
+    """Lower the cell's step function with abstract inputs.  Returns
+    (lowered, kind)."""
+    opt = opt or OptimizerConfig(moment_dtype=plan.arch.moment_dtype)
+    kind = plan.shape.kind
+    with shd.sharding_ctx(plan.mesh, plan.rules):
+        if kind == "train":
+            fn = build_train_step(plan, opt)
+            args = (abstract_params(plan), abstract_opt_state(plan, opt),
+                    abstract_batch(plan))
+            lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(*args)
+        elif kind == "prefill":
+            fn = build_prefill_step(plan)
+            args = (abstract_params(plan), abstract_batch(plan))
+            lowered = jax.jit(fn).lower(*args)
+        else:  # decode
+            fn = build_decode_step(plan)
+            tok, cache, pos = abstract_decode_inputs(plan)
+            lowered = jax.jit(fn, donate_argnums=(2,)).lower(
+                abstract_params(plan), tok, cache, pos
+            )
+    return lowered, kind

@@ -1,0 +1,3 @@
+# Model zoo: one periodic-pattern decoder LM covering dense GQA / MLA /
+# MoE (sample-sort dispatch) / Mamba-2 SSD / hybrid, plus an enc-dec
+# backbone (whisper) and stub modality frontends (audio/vision).

@@ -1,0 +1,70 @@
+"""Unified model API: template/loss/prefill/decode for any ModelConfig."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import encdec, transformer
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.n_encoder_layers > 0
+
+
+def template(cfg: ModelConfig):
+    return encdec.encdec_template(cfg) if is_encdec(cfg) else transformer.lm_template(cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    if is_encdec(cfg):
+        return encdec.encdec_loss(params, batch, cfg)
+    return transformer.lm_loss(params, batch, cfg)
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    if is_encdec(cfg):
+        return encdec.prefill(params, batch, cfg, cache_len)
+    return transformer.prefill(
+        params, batch["tokens"], cfg, cache_len,
+        prefix_embeds=batch.get("prefix_embeds"),
+    )
+
+
+def decode_step(params, token, caches, pos, cfg: ModelConfig):
+    if is_encdec(cfg):
+        return encdec.decode_step(params, token, caches, pos, cfg)
+    return transformer.decode_step(params, token, caches, pos, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    if is_encdec(cfg):
+        return encdec.init_cache(cfg, batch, cache_len)
+    return transformer.init_cache(cfg, batch, cache_len)
+
+
+def cache_axes(cfg: ModelConfig):
+    if is_encdec(cfg):
+        return encdec.cache_axes(cfg)
+    return transformer.cache_axes(cfg)
+
+
+def make_batch_shapes(cfg: ModelConfig, batch: int, seq: int):
+    """ShapeDtypeStruct batch for train/prefill (stub frontends included)."""
+    import jax
+
+    b = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if is_encdec(cfg):
+        b["enc_frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_positions, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+        del b["targets"]
+        b["targets"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    elif cfg.frontend != "none" and cfg.frontend_len:
+        b["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return b

@@ -1,0 +1,339 @@
+"""Attention mixers: GQA (chunked/flash-style + decode) and MLA.
+
+Chunked attention scans over query and key blocks with an online
+softmax (f32 stats), so prefill_32k activations stay bounded without a
+hardware kernel; block size = cfg.attn_chunk.  Causally-masked blocks
+above the diagonal are still computed (static shapes) — the roofline
+accounts for this (MODEL_FLOPS ratio) and the Pallas flash kernel is
+the corresponding hillclimb on real TPU.
+
+MLA (MiniCPM3 / DeepSeek-V2): low-rank Q and KV compression with a
+decoupled RoPE channel.  Decode uses the ABSORBED form (scores against
+the compressed c_kv cache), which is what makes the MLA cache small.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import apply_rope
+from repro.models.meta import ParamMeta
+from repro.sharding import constrain
+
+
+# ------------------------------------------------------------------ GQA
+def gqa_template(cfg: ModelConfig):
+    d, h, k, dh, pd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh, cfg.param_dtype
+    t = {
+        "wq": ParamMeta((d, h, dh), ("embed", "heads", "head_dim"), pd),
+        "wk": ParamMeta((d, k, dh), ("embed", "kv_heads", "head_dim"), pd),
+        "wv": ParamMeta((d, k, dh), ("embed", "kv_heads", "head_dim"), pd),
+        "wo": ParamMeta((h, dh, d), ("heads", "head_dim", "embed"), pd),
+    }
+    if cfg.attn_bias:
+        t["bq"] = ParamMeta((h, dh), ("heads", "head_dim"), pd, "zeros")
+        t["bk"] = ParamMeta((k, dh), ("kv_heads", "head_dim"), pd, "zeros")
+        t["bv"] = ParamMeta((k, dh), ("kv_heads", "head_dim"), pd, "zeros")
+    return t
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    x = x.astype(cfg.dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cfg.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cfg.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cfg.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(cfg.dtype)
+        k = k + p["bk"].astype(cfg.dtype)
+        v = v + p["bv"].astype(cfg.dtype)
+    # "qk_seq" gives sequence-TP attention when head counts don't
+    # divide the model axis (see sharding.default_rules).
+    q = constrain(q, "batch", "qk_seq", "heads", "head_dim")
+    k = constrain(k, "batch", "qk_seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "qk_seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, chunk: int, causal: bool, q_offset=0,
+                      unroll: bool = False):
+    """Online-softmax attention.  q: (B,Sq,H,D); k,v: (B,Sk,K,D), H=K*G.
+
+    Scans over key blocks (and maps over query blocks) with f32 running
+    max / denominator — memory O(Sq * chunk) instead of O(Sq * Sk).
+    unroll=True replaces the loops with straight-line code (identical
+    math): used by the dry-run probes because XLA cost_analysis counts
+    while-loop bodies once.
+    """
+    b, sq0, h, d = q.shape
+    sk0, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # MLA: value head dim may differ from qk head dim
+    g = h // kh
+    cq = min(chunk, sq0)
+    ck = min(chunk, sk0)
+    # pad both sequence dims to chunk multiples; padded keys are masked,
+    # padded query rows are sliced off the output.
+    sq = -(-sq0 // cq) * cq
+    sk = -(-sk0 // ck) * ck
+    if sq > sq0:
+        q = jnp.pad(q, ((0, 0), (0, sq - sq0), (0, 0), (0, 0)))
+    if sk > sk0:
+        k = jnp.pad(k, ((0, 0), (0, sk - sk0), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk - sk0), (0, 0), (0, 0)))
+    nq, nk = sq // cq, sk // ck
+    scale = d ** -0.5
+
+    qb = q.reshape(b, nq, cq, kh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(b, nk, ck, kh, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, ck, kh, dv).transpose(1, 0, 2, 3, 4)
+
+    def q_block(qi, qc):
+        # qc: (B, cq, K, G, D)
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            kj, kc, vc = inp
+            s = jnp.einsum(
+                "bqkgd,bskd->bkgqs", qc, kc, preferred_element_type=jnp.float32
+            ) * scale  # (B,K,G,cq,ck)
+            kpos = kj * ck + jnp.arange(ck)
+            if causal:
+                qpos = q_offset + qi * cq + jnp.arange(cq)
+                mask = (kpos[None, :] <= qpos[:, None]) & (kpos < sk0)[None, :]
+            else:
+                mask = jnp.broadcast_to((kpos < sk0)[None, :], (cq, ck))
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, cq, dv), jnp.float32)
+        if unroll:
+            carry = (m0, l0, a0)
+            for kj in range(nk):
+                carry, _ = kv_block(carry, (jnp.int32(kj), kb[kj], vb[kj]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_block, (m0, l0, a0), (jnp.arange(nk), kb, vb)
+            )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,K,G,cq,Dv)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, cq, h, dv)
+
+    if unroll:
+        outs = jnp.stack([q_block(jnp.int32(i), qb[i]) for i in range(nq)])
+    else:
+        outs = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qb))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv)
+    return out[:, :sq0].astype(q.dtype)
+
+
+def gqa_forward(p, x, cfg: ModelConfig, positions, causal=True):
+    """Full-sequence self-attention (train / encoder)."""
+    q, k, v = _qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, chunk=cfg.attn_chunk, causal=causal,
+                            unroll=not cfg.scan_layers)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(cfg.dtype), p["wo"].astype(cfg.dtype))
+    return constrain(out, "batch", "seq", "embed")
+
+
+def gqa_prefill(p, x, cfg: ModelConfig, positions, cache_len: int):
+    """Causal forward that also returns a (padded) KV cache entry."""
+    q, k, v = _qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, chunk=cfg.attn_chunk, causal=True,
+                            unroll=not cfg.scan_layers)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(cfg.dtype), p["wo"].astype(cfg.dtype))
+    b, s, kh, dh = k.shape
+    pad = cache_len - s
+    cache = {
+        "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+    }
+    cache = {kk: constrain(vv, "batch", "kv_seq", "kv_heads", "head_dim")
+             for kk, vv in cache.items()}
+    return constrain(out, "batch", "seq", "embed"), cache
+
+
+def gqa_decode(p, x, cfg: ModelConfig, cache, pos):
+    """One-token decode.  x: (B,1,d); cache k/v: (B,L,K,Dh); pos: scalar."""
+    q, k, v = _qkv(p, x, cfg)
+    q = apply_rope(q, pos[None], cfg.rope_theta)  # positions (1,) broadcasts
+    k = apply_rope(k, pos[None], cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    ck = constrain(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+    cv = constrain(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+    b, l, kh, dh = ck.shape
+    g = q.shape[2] // kh
+    qg = q.reshape(b, 1, kh, g, dh)
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, ck, preferred_element_type=jnp.float32
+    ) * (dh ** -0.5)
+    mask = jnp.arange(l)[None, None, None, None, :] <= pos
+    s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgqs,bskd->bkgqd", w.astype(cv.dtype), cv,
+        preferred_element_type=jnp.float32,
+    )
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, 1, kh * g, dh)
+    out = jnp.einsum(
+        "bshk,hkd->bsd", o.astype(cfg.dtype), p["wo"].astype(cfg.dtype)
+    )
+    return constrain(out, "batch", "seq", "embed"), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------- cross-attn
+def cross_template(cfg: ModelConfig):
+    """Encoder-decoder cross attention (whisper): KV from encoder memory."""
+    return gqa_template(cfg)
+
+
+def cross_forward(p, x, memory, cfg: ModelConfig):
+    """x: (B,S,d) decoder; memory: (B,M,d) encoder output.  No RoPE."""
+    x = x.astype(cfg.dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cfg.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", memory.astype(cfg.dtype), p["wk"].astype(cfg.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", memory.astype(cfg.dtype), p["wv"].astype(cfg.dtype))
+    q = constrain(q, "batch", "qk_seq", "heads", "head_dim")
+    k = constrain(k, "batch", None, "kv_heads", "head_dim")
+    v = constrain(v, "batch", None, "kv_heads", "head_dim")
+    if "bq" in p:
+        q = q + p["bq"].astype(cfg.dtype)
+        k = k + p["bk"].astype(cfg.dtype)
+        v = v + p["bv"].astype(cfg.dtype)
+    out = chunked_attention(q, k, v, chunk=cfg.attn_chunk, causal=False,
+                            unroll=not cfg.scan_layers)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(cfg.dtype), p["wo"].astype(cfg.dtype))
+    return constrain(out, "batch", "seq", "embed")
+
+
+# ------------------------------------------------------------------ MLA
+def mla_template(cfg: ModelConfig):
+    d, h, pd = cfg.d_model, cfg.n_heads, cfg.param_dtype
+    m = cfg.mla
+    dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": ParamMeta((d, m.q_lora_rank), ("embed", "lora"), pd),
+        "q_norm": ParamMeta((m.q_lora_rank,), ("lora",), pd, "ones"),
+        "wq_b": ParamMeta((m.q_lora_rank, h, dqk), ("lora", "heads", "head_dim"), pd),
+        "wkv_a": ParamMeta(
+            (d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", "lora"), pd
+        ),
+        "kv_norm": ParamMeta((m.kv_lora_rank,), ("lora",), pd, "ones"),
+        "wkv_b": ParamMeta(
+            (m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim),
+            ("lora", "heads", "head_dim"),
+            pd,
+        ),
+        "wo": ParamMeta((h, m.v_head_dim, d), ("heads", "head_dim", "embed"), pd),
+    }
+
+
+def _rms(x, w, eps):
+    xf = x.astype(jnp.float32)
+    return (
+        xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        * w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def _mla_qkr(p, x, cfg, positions):
+    """Shared MLA projections: q (nope+rope'd), c_kv, k_rope."""
+    m = cfg.mla
+    x = x.astype(cfg.dtype)
+    cq = _rms(x @ p["wq_a"].astype(cfg.dtype), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(cfg.dtype))
+    q = constrain(q, "batch", "qk_seq", "heads", "head_dim")
+    qn, qr = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    kv = x @ p["wkv_a"].astype(cfg.dtype)
+    c_kv = _rms(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    kr = kv[..., m.kv_lora_rank :][:, :, None, :]  # (B,S,1,rope)
+    kr = apply_rope(kr, positions, cfg.rope_theta)
+    return qn, qr, c_kv, kr
+
+
+def mla_forward(p, x, cfg: ModelConfig, positions):
+    """Training/prefill MLA (direct, un-absorbed form)."""
+    m = cfg.mla
+    h = cfg.n_heads
+    qn, qr, c_kv, kr = _mla_qkr(p, x, cfg, positions)
+    kvb = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"].astype(cfg.dtype))
+    kvb = constrain(kvb, "batch", "qk_seq", "heads", "head_dim")
+    kn, v = kvb[..., : m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim :]
+    q = jnp.concatenate([qn, qr], axis=-1)
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr, kn.shape[:-1] + (m.qk_rope_head_dim,))], axis=-1)
+    out = chunked_attention(q, k, v, chunk=cfg.attn_chunk, causal=True,
+                            unroll=not cfg.scan_layers)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(cfg.dtype), p["wo"].astype(cfg.dtype))
+    return constrain(out, "batch", "seq", "embed")
+
+
+def mla_prefill(p, x, cfg: ModelConfig, positions, cache_len: int):
+    out = mla_forward(p, x, cfg, positions)
+    m = cfg.mla
+    x = x.astype(cfg.dtype)
+    kv = x @ p["wkv_a"].astype(cfg.dtype)
+    c_kv = _rms(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    kr = apply_rope(
+        kv[..., m.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]
+    b, s = x.shape[:2]
+    pad = cache_len - s
+    cache = {
+        "c_kv": constrain(
+            jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))), "batch", "kv_seq", None
+        ),
+        "k_rope": constrain(
+            jnp.pad(kr, ((0, 0), (0, pad), (0, 0))), "batch", "kv_seq", None
+        ),
+    }
+    return out, cache
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache, pos):
+    """Absorbed-form MLA decode against the compressed cache."""
+    m = cfg.mla
+    qn, qr, c_kv_new, kr_new = _mla_qkr(p, x, cfg, pos[None])
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), pos, axis=1
+    )
+    crp = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new[:, :, 0, :].astype(cache["k_rope"].dtype), pos, axis=1
+    )
+    wkb = p["wkv_b"].astype(cfg.dtype)
+    wk = wkb[..., : m.qk_nope_head_dim]  # (r, H, dn)
+    wv = wkb[..., m.qk_nope_head_dim :]  # (r, H, dv)
+    # absorb: q̃ = qn @ wk^T  -> score against c_kv directly
+    qt = jnp.einsum("bshk,rhk->bshr", qn, wk)  # (B,1,H,r)
+    s_c = jnp.einsum("bshr,blr->bhsl", qt, ck, preferred_element_type=jnp.float32)
+    s_r = jnp.einsum(
+        "bshk,blk->bhsl", qr, crp, preferred_element_type=jnp.float32
+    )
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (s_c + s_r) * scale
+    l = ck.shape[1]
+    mask = jnp.arange(l)[None, None, None, :] <= pos
+    w = jax.nn.softmax(jnp.where(mask, s, -jnp.inf), axis=-1)
+    o_c = jnp.einsum(
+        "bhsl,blr->bshr", w.astype(ck.dtype), ck, preferred_element_type=jnp.float32
+    )  # (B,1,H,r)
+    o = jnp.einsum("bshr,rhk->bshk", o_c.astype(cfg.dtype), wv)  # (B,1,H,dv)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.dtype))
+    return (
+        constrain(out, "batch", "seq", "embed"),
+        {"c_kv": ck, "k_rope": crp},
+    )

@@ -1,0 +1,210 @@
+"""Encoder-decoder backbone (whisper-large-v3 shape).
+
+The audio conv frontend is a STUB per the assignment: inputs are
+precomputed frame embeddings (B, F, d_model).  Encoder = bidirectional
+self-attention + GELU MLP; decoder = causal self-attention +
+cross-attention + GELU MLP; layernorm throughout.  Positions are
+sinusoidal (whisper's encoder convention; decoder's learned table is
+approximated sinusoidally — backbone-fidelity note in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.meta import ParamMeta
+from repro.models.transformer import (
+    _layer_loop,
+    _layer_loop_cache,
+    _remat,
+    _stack_period,
+    chunked_ce,
+)
+from repro.sharding import constrain
+
+
+def sinusoid(positions, d: int):
+    """(S,) -> (S, d) sinusoidal embedding (whisper convention)."""
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1)
+    )
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_slot(cfg):
+    return {
+        "ln": L.norm_template(cfg),
+        "attn": attn.gqa_template(cfg),
+        "ln2": L.norm_template(cfg),
+        "mlp": L.mlp_template(cfg),
+    }
+
+
+def _dec_slot(cfg):
+    return {
+        "ln": L.norm_template(cfg),
+        "attn": attn.gqa_template(cfg),
+        "ln_x": L.norm_template(cfg),
+        "xattn": attn.cross_template(cfg),
+        "ln2": L.norm_template(cfg),
+        "mlp": L.mlp_template(cfg),
+    }
+
+
+def encdec_template(cfg: ModelConfig):
+    assert cfg.n_encoder_layers > 0
+    return {
+        "embed": L.embed_template(cfg),
+        "enc_period": _stack_period(_enc_slot(cfg), cfg.n_encoder_layers),
+        "enc_final_norm": L.norm_template(cfg),
+        "period": _stack_period(_dec_slot(cfg), cfg.n_layers),
+        "final_norm": L.norm_template(cfg),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B,F,d) stub embeddings -> encoder memory (B,F,d)."""
+    bsz, f, d = frames.shape
+    x = frames.astype(cfg.dtype) + sinusoid(jnp.arange(f), d)[None].astype(cfg.dtype)
+    positions = jnp.arange(f)[None, :]
+
+    def fn(x, pp):
+        h = attn.gqa_forward(
+            pp["attn"], L.norm_apply(pp["ln"], x, cfg), cfg, positions, causal=False
+        )
+        x = x + h
+        x = x + L.mlp_apply(pp["mlp"], L.norm_apply(pp["ln2"], x, cfg), cfg)
+        return constrain(x, "batch", "seq", "embed"), None
+
+    x = _layer_loop(cfg, _remat(cfg, fn), x, params["enc_period"])
+    return L.norm_apply(params["enc_final_norm"], x, cfg)
+
+
+def _dec_block(pp, x, memory, cfg, positions):
+    x = x + attn.gqa_forward(
+        pp["attn"], L.norm_apply(pp["ln"], x, cfg), cfg, positions, causal=True
+    )
+    x = x + attn.cross_forward(
+        pp["xattn"], L.norm_apply(pp["ln_x"], x, cfg), memory, cfg
+    )
+    x = x + L.mlp_apply(pp["mlp"], L.norm_apply(pp["ln2"], x, cfg), cfg)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def encdec_loss(params, batch, cfg: ModelConfig):
+    memory = encode(params, batch["enc_frames"], cfg)
+    tokens, targets = batch["tokens"], batch["targets"]
+    bsz, s = tokens.shape
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    x = x + sinusoid(jnp.arange(s), cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.arange(s)[None, :]
+
+    def fn(x, pp):
+        return _dec_block(pp, x, memory, cfg, positions), None
+
+    x = _layer_loop(cfg, _remat(cfg, fn), x, params["period"])
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    b, s, _ = x.shape
+    return chunked_ce(params, x, targets, cfg) / (b * s)
+
+
+# ------------------------------------------------------------- serving
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    k, dh, f = cfg.n_kv_heads, cfg.dh, cfg.frontend_len or cfg.encoder_positions
+    ent = {
+        "k": jnp.zeros((batch, cache_len, k, dh), dt),
+        "v": jnp.zeros((batch, cache_len, k, dh), dt),
+        "xk": jnp.zeros((batch, f, k, dh), dt),
+        "xv": jnp.zeros((batch, f, k, dh), dt),
+    }
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), ent)
+
+
+def cache_axes(cfg: ModelConfig):
+    return {
+        "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "xk": ("layers", "batch", None, "kv_heads", "head_dim"),
+        "xv": ("layers", "batch", None, "kv_heads", "head_dim"),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    """Encode + decoder prefill.  Returns (last logits (B,V), caches)."""
+    memory = encode(params, batch["enc_frames"], cfg)
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    x = x + sinusoid(jnp.arange(s), cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.arange(s)[None, :]
+
+    def fn(x, pp):
+        h, cache = attn.gqa_prefill(
+            pp["attn"], L.norm_apply(pp["ln"], x, cfg), cfg, positions, cache_len
+        )
+        x = x + h
+        x = x + attn.cross_forward(
+            pp["xattn"], L.norm_apply(pp["ln_x"], x, cfg), memory, cfg
+        )
+        x = x + L.mlp_apply(pp["mlp"], L.norm_apply(pp["ln2"], x, cfg), cfg)
+        mem = memory.astype(cfg.dtype)
+        xk = jnp.einsum("bsd,dhk->bshk", mem, pp["xattn"]["wk"].astype(cfg.dtype))
+        xv = jnp.einsum("bsd,dhk->bshk", mem, pp["xattn"]["wv"].astype(cfg.dtype))
+        if "bk" in pp["xattn"]:
+            xk = xk + pp["xattn"]["bk"].astype(cfg.dtype)
+            xv = xv + pp["xattn"]["bv"].astype(cfg.dtype)
+        cache = dict(cache, xk=xk, xv=xv)
+        return x, cache
+
+    x, caches = _layer_loop_cache(cfg, fn, x, params["period"], None)
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x[:, -1:, :], cfg)[:, 0, :]
+    return logits, caches
+
+
+def decode_step(params, token, caches, pos, cfg: ModelConfig):
+    x = L.embed_apply(params["embed"], token, cfg)
+    x = x + sinusoid(pos[None], cfg.d_model)[None].astype(x.dtype)
+
+    def fn(x, inp):
+        pp, cache = inp
+        h, new = attn.gqa_decode(
+            pp["attn"], L.norm_apply(pp["ln"], x, cfg), cfg,
+            {"k": cache["k"], "v": cache["v"]}, pos,
+        )
+        x = x + h
+        # cross attention against cached memory projections
+        xc = L.norm_apply(pp["ln_x"], x, cfg).astype(cfg.dtype)
+        q = jnp.einsum("bsd,dhk->bshk", xc, pp["xattn"]["wq"].astype(cfg.dtype))
+        if "bq" in pp["xattn"]:
+            q = q + pp["xattn"]["bq"].astype(cfg.dtype)
+        kh = cache["xk"].shape[2]
+        g = q.shape[2] // kh
+        b = q.shape[0]
+        qg = q.reshape(b, 1, kh, g, cfg.dh)
+        s = jnp.einsum(
+            "bqkgd,bskd->bkgqs", qg, cache["xk"],
+            preferred_element_type=jnp.float32,
+        ) * (cfg.dh ** -0.5)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum(
+            "bkgqs,bskd->bkgqd", w.astype(cache["xv"].dtype), cache["xv"],
+            preferred_element_type=jnp.float32,
+        ).transpose(0, 3, 1, 2, 4).reshape(b, 1, kh * g, cfg.dh)
+        x = x + jnp.einsum(
+            "bshk,hkd->bsd", o.astype(cfg.dtype), pp["xattn"]["wo"].astype(cfg.dtype)
+        )
+        x = x + L.mlp_apply(pp["mlp"], L.norm_apply(pp["ln2"], x, cfg), cfg)
+        return x, dict(new, xk=cache["xk"], xv=cache["xv"])
+
+    x, new_caches = _layer_loop_cache(cfg, fn, x, params["period"], caches)
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x, cfg)[:, 0, :]
+    return logits, new_caches

@@ -1,0 +1,115 @@
+"""Shared layers: norms, MLPs, embeddings, RoPE (pure functional)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.meta import ParamMeta
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------- norms
+def norm_template(cfg: ModelConfig):
+    d = cfg.d_model
+    t = {"w": ParamMeta((d,), ("embed",), cfg.param_dtype, "ones")}
+    if cfg.norm == "layernorm":
+        t["b"] = ParamMeta((d,), ("embed",), cfg.param_dtype, "zeros")
+    return t
+
+
+def norm_apply(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["w"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    return out.astype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_template(cfg: ModelConfig, d_ff: int | None = None):
+    d, ff, pd = cfg.d_model, d_ff or cfg.d_ff, cfg.param_dtype
+    if cfg.activation == "swiglu":
+        return {
+            "wg": ParamMeta((d, ff), ("embed", "mlp"), pd),
+            "wu": ParamMeta((d, ff), ("embed", "mlp"), pd),
+            "wd": ParamMeta((ff, d), ("mlp", "embed"), pd),
+        }
+    return {
+        "w1": ParamMeta((d, ff), ("embed", "mlp"), pd),
+        "b1": ParamMeta((ff,), ("mlp",), pd, "zeros"),
+        "w2": ParamMeta((ff, d), ("mlp", "embed"), pd),
+        "b2": ParamMeta((d,), ("embed",), pd, "zeros"),
+    }
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    x = x.astype(cfg.dtype)
+    if cfg.activation == "swiglu":
+        g = x @ p["wg"].astype(cfg.dtype)
+        u = x @ p["wu"].astype(cfg.dtype)
+        h = jax.nn.silu(g) * u
+        h = constrain(h, "batch", "seq", "mlp")
+        return h @ p["wd"].astype(cfg.dtype)
+    h = jax.nn.gelu(x @ p["w1"].astype(cfg.dtype) + p["b1"].astype(cfg.dtype))
+    h = constrain(h, "batch", "seq", "mlp")
+    return h @ p["w2"].astype(cfg.dtype) + p["b2"].astype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- embed
+def embed_template(cfg: ModelConfig):
+    v = cfg.padded_vocab
+    t = {
+        "tok": ParamMeta(
+            (v, cfg.d_model), ("vocab", "embed"), cfg.param_dtype, "small"
+        )
+    }
+    if not cfg.tie_embeddings:
+        t["unembed"] = ParamMeta(
+            (cfg.d_model, v), ("embed", "vocab"), cfg.param_dtype
+        )
+    return t
+
+
+def embed_apply(p, tokens, cfg: ModelConfig):
+    out = jnp.take(p["tok"].astype(cfg.dtype), tokens, axis=0)
+    return constrain(out, "batch", "seq", "embed")
+
+
+def unembed_apply(p, x, cfg: ModelConfig):
+    """Logits over the PADDED vocab; pad columns masked to -inf-ish."""
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    logits = x.astype(cfg.dtype) @ w.astype(cfg.dtype)
+    if cfg.padded_vocab != cfg.vocab:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad, jnp.asarray(-1e9, logits.dtype), logits)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_angles(positions, dh: int, theta: float):
+    """positions (...,) int -> (..., dh/2) angles."""
+    inv = 1.0 / (
+        theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh)
+    )  # (dh/2,)
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions broadcastable to (..., S)."""
+    d = x.shape[-1]
+    ang = rope_angles(positions, d, theta)  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)

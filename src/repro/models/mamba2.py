@@ -1,0 +1,211 @@
+"""Mamba-2 block: SSD (state-space duality) chunked scan + O(1) decode.
+
+Chunked algorithm per the Mamba-2 paper (arXiv:2405.21060, Listing 1):
+intra-chunk quadratic term + inter-chunk state recurrence.  The
+recurrence is a lax.scan over chunks (linear in chunk count, stable in
+f32), which is also what makes the long_500k decode shape sub-quadratic:
+the decode step is a single state update, O(d_state) per channel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.meta import ParamMeta
+from repro.sharding import constrain
+
+
+def dims(cfg: ModelConfig):
+    ss = cfg.ssm
+    d_inner = ss.expand * cfg.d_model
+    n_heads = d_inner // ss.head_dim
+    conv_dim = d_inner + 2 * ss.n_groups * ss.d_state
+    d_in_proj = 2 * d_inner + 2 * ss.n_groups * ss.d_state + n_heads
+    return d_inner, n_heads, conv_dim, d_in_proj
+
+
+def mamba_template(cfg: ModelConfig):
+    ss, pd = cfg.ssm, cfg.param_dtype
+    d_inner, n_heads, conv_dim, d_in_proj = dims(cfg)
+    return {
+        "in_proj": ParamMeta((cfg.d_model, d_in_proj), ("embed", "ssm_inner"), pd),
+        "conv_w": ParamMeta((ss.d_conv, conv_dim), ("conv", "ssm_inner"), pd, "small"),
+        "conv_b": ParamMeta((conv_dim,), ("ssm_inner",), pd, "zeros"),
+        "a_log": ParamMeta((n_heads,), (None,), "float32", "ones"),
+        "d_skip": ParamMeta((n_heads,), (None,), "float32", "ones"),
+        "dt_bias": ParamMeta((n_heads,), (None,), "float32", "zeros"),
+        "norm_w": ParamMeta((d_inner,), ("ssm_inner",), pd, "ones"),
+        "out_proj": ParamMeta((d_inner, cfg.d_model), ("ssm_inner", "embed"), pd),
+    }
+
+
+def _split_proj(cfg, proj):
+    ss = cfg.ssm
+    d_inner, n_heads, conv_dim, _ = dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_inner, d_inner + conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _split_xbc(cfg, xbc):
+    ss = cfg.ssm
+    d_inner, *_ = dims(cfg)
+    gn = ss.n_groups * ss.d_state
+    x, b, c = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+    return x, b, c
+
+
+def _gated_norm(y, z, w, eps):
+    yf = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return yf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+
+
+def mamba_forward(p, xin, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence SSD.  xin: (B,S,d).  Optionally returns final caches
+    (conv tail + SSM state) for prefill->decode handoff."""
+    ss = cfg.ssm
+    d_inner, n_heads, conv_dim, _ = dims(cfg)
+    bsz, s, _ = xin.shape
+    q = min(ss.chunk, s)
+    assert s % q == 0
+    nc = s // q
+    hd, ns, g = ss.head_dim, ss.d_state, ss.n_groups
+
+    proj = xin.astype(cfg.dtype) @ p["in_proj"].astype(cfg.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    # causal depthwise conv1d (kernel d_conv) over sequence
+    pad = jnp.zeros((bsz, ss.d_conv - 1, conv_dim), xbc.dtype)
+    xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+    conv_tail = xbc_pad[:, -(ss.d_conv - 1):, :] if return_state else None
+    wc = p["conv_w"].astype(cfg.dtype)  # (d_conv, conv_dim)
+    xbc = sum(
+        xbc_pad[:, i : i + s, :] * wc[i][None, None, :] for i in range(ss.d_conv)
+    ) + p["conv_b"].astype(cfg.dtype)
+    xbc = jax.nn.silu(xbc)
+
+    xs, b, c = _split_xbc(cfg, xbc)
+    xh = xs.reshape(bsz, s, n_heads, hd)
+    bg = b.reshape(bsz, s, g, ns)
+    cg = c.reshape(bsz, s, g, ns)
+    hpg = n_heads // g  # heads per B/C group
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+    da = dt * a[None, None, :]  # (B,S,H) decay log
+    xdt = xh.astype(jnp.float32) * dt[..., None]  # dt-weighted input
+
+    # chunk views
+    dac = da.reshape(bsz, nc, q, n_heads)
+    da_cs = jnp.cumsum(dac, axis=2)  # (B,nc,Q,H)
+    xc = xdt.reshape(bsz, nc, q, n_heads, hd)
+    bc = bg.reshape(bsz, nc, q, g, ns).astype(jnp.float32)
+    cc = cg.reshape(bsz, nc, q, g, ns).astype(jnp.float32)
+
+    # intra-chunk (diagonal) term.  Mask BEFORE exp: the upper triangle is
+    # positive and would overflow to inf, poisoning grads through where().
+    li = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[None, None, :, :, None]
+    l = jnp.where(mask, jnp.exp(jnp.where(mask, li, 0.0)), 0.0)
+    cb = jnp.einsum("bcign,bcjgn->bcijg", cc, bc)  # (B,nc,Qi,Qj,g)
+    cb = jnp.repeat(cb, hpg, axis=-1)  # -> per head
+    y_diag = jnp.einsum("bcijh,bcijh,bcjhp->bcihp", cb, l, xc)
+
+    # chunk states + inter-chunk scan
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bcqgn,bcqh,bcqhp->bchpn",
+        bc,
+        decay_states,
+        xc.reshape(bsz, nc, q, n_heads, hd),
+    )  # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])  # (B,nc,H)
+
+    def scan_fn(h0, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h1 = h0 * dec[..., None, None] + st
+        return h1, h0  # emit state at chunk START
+
+    h_init = jnp.zeros((bsz, n_heads, hd, ns), jnp.float32)
+    st_t = states.transpose(1, 0, 2, 3, 4)
+    dec_t = chunk_decay.transpose(1, 0, 2)
+    if cfg.scan_layers:
+        h_last, h_starts = jax.lax.scan(scan_fn, h_init, (st_t, dec_t))
+    else:  # unrolled for the dry-run probes (cost_analysis fidelity)
+        hs, h = [], h_init
+        for i in range(nc):
+            h, h0 = scan_fn(h, (st_t[i], dec_t[i]))
+            hs.append(h0)
+        h_last, h_starts = h, jnp.stack(hs)
+    h_starts = h_starts.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # inter-chunk (off-diagonal) output
+    state_decay = jnp.exp(da_cs)  # (B,nc,Q,H)
+    cch = jnp.repeat(cc, hpg, axis=3)  # (B,nc,Q,H,N)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", cch, h_starts, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, n_heads, hd)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(
+        jnp.float32
+    )
+    y = y.reshape(bsz, s, d_inner)
+    y = _gated_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = y.astype(cfg.dtype) @ p["out_proj"].astype(cfg.dtype)
+    out = constrain(out, "batch", "seq", "embed")
+    if return_state:
+        return out, {"conv": conv_tail, "ssm": h_last}
+    return out
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype):
+    ss = cfg.ssm
+    d_inner, n_heads, conv_dim, _ = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, ss.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, ss.head_dim, ss.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, xin, cfg: ModelConfig, cache):
+    """Single-token step.  xin: (B,1,d); cache: {conv, ssm}."""
+    ss = cfg.ssm
+    d_inner, n_heads, conv_dim, _ = dims(cfg)
+    bsz = xin.shape[0]
+    hd, ns, g = ss.head_dim, ss.d_state, ss.n_groups
+
+    proj = xin[:, 0, :].astype(cfg.dtype) @ p["in_proj"].astype(cfg.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)  # (B, ...)
+
+    conv_buf = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    wc = p["conv_w"].astype(cfg.dtype)
+    xbc = jnp.einsum("bkc,kc->bc", conv_buf, wc) + p["conv_b"].astype(cfg.dtype)
+    xbc = jax.nn.silu(xbc)
+    new_conv = conv_buf[:, 1:, :]
+
+    xs, b, c = _split_xbc(cfg, xbc)
+    xh = xs.reshape(bsz, n_heads, hd).astype(jnp.float32)
+    bg = b.reshape(bsz, g, ns).astype(jnp.float32)
+    cg = c.reshape(bsz, g, ns).astype(jnp.float32)
+    hpg = n_heads // g
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a[None, :])  # (B,H)
+    bh = jnp.repeat(bg, hpg, axis=1)  # (B,H,N)
+    ch = jnp.repeat(cg, hpg, axis=1)
+    h = cache["ssm"] * dec[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, bh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h, ch) + p["d_skip"].astype(jnp.float32)[
+        None, :, None
+    ] * xh
+    y = y.reshape(bsz, d_inner)
+    y = _gated_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = (y.astype(cfg.dtype) @ p["out_proj"].astype(cfg.dtype))[:, None, :]
+    return constrain(out, "batch", "seq", "embed"), {"conv": new_conv, "ssm": h}

@@ -1,0 +1,78 @@
+"""Parameter templates: single source of truth for shapes/dtypes/sharding.
+
+Models describe their parameters as a pytree of ``ParamMeta`` leaves;
+from it we derive (a) materialized params for tests/training, (b)
+ShapeDtypeStruct trees for the dry-run (.lower/.compile with zero
+allocation), (c) PartitionSpec trees via the logical-axis rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axes, len == len(shape)
+    dtype: str = "float32"
+    init: str = "normal"  # normal | zeros | ones | small
+    scale: float | None = None  # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def tree_map_meta(f, template):
+    return jax.tree.map(f, template, is_leaf=is_meta)
+
+
+def abstract_params(template):
+    """ShapeDtypeStruct tree (for jit.lower / eval_shape)."""
+    return tree_map_meta(
+        lambda m: jax.ShapeDtypeStruct(m.shape, jnp.dtype(m.dtype)), template
+    )
+
+
+def param_specs(template, rules, axis_sizes):
+    """PartitionSpec tree from logical axes (divisibility-aware)."""
+    return tree_map_meta(
+        lambda m: sharding.resolve(m.axes, rules, axis_sizes, shape=m.shape),
+        template,
+    )
+
+
+def init_params(template, key):
+    """Materialize parameters (tests / real training)."""
+    leaves, treedef = jax.tree.flatten(template, is_leaf=is_meta)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(m: ParamMeta, k):
+        dt = jnp.dtype(m.dtype)
+        if m.init == "zeros":
+            return jnp.zeros(m.shape, dt)
+        if m.init == "ones":
+            return jnp.ones(m.shape, dt)
+        fan_in = m.shape[0] if len(m.shape) >= 1 else 1
+        scale = m.scale if m.scale is not None else 1.0 / max(fan_in, 1) ** 0.5
+        if m.init == "small":
+            scale = 0.02
+        return (jax.random.normal(k, m.shape, jnp.float32) * scale).astype(dt)
+
+    return jax.tree.unflatten(treedef, [mk(m, k) for m, k in zip(leaves, keys)])
+
+
+def count_params(template) -> int:
+    import math
+
+    leaves = jax.tree.leaves(template, is_leaf=is_meta)
+    return sum(math.prod(m.shape) for m in leaves)

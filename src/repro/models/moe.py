@@ -1,0 +1,158 @@
+"""Mixture-of-Experts with SAMPLE-SORT dispatch (the paper, first-class).
+
+Token dispatch is the bucket phase of GPU BUCKET SORT with the router's
+expert ids as precomputed bucket assignments: stable sort of
+(expert_id, slot) pairs (steps 1-2 analogue), per-expert counts +
+column prefix sum (step 7), one relocation scatter into the dense
+(E, capacity, d) buffer (step 8).  Determinism => static capacity and
+bitwise-reproducible routing (checkpoint/restart safe), exactly the
+property the paper argues for.
+
+Dispatch impls:
+  sample_sort — stable bucket-sort argsort of expert ids (ours)
+  xla_sort    — jnp.argsort baseline (same layout, vendor sort)
+  onehot      — GShard-style dense one-hot einsum dispatch (no sort);
+                most GSPMD-friendly, used as a compile fallback/ablation
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import bucket_sort
+from repro.core.sort_config import SortConfig, round_up
+from repro.models.meta import ParamMeta
+from repro.sharding import constrain
+
+_DISPATCH_SORT_CFG = SortConfig(tile=2048, s=64, direct_max=8192)
+
+
+def moe_template(cfg: ModelConfig):
+    d, pd = cfg.d_model, cfg.param_dtype
+    mo = cfg.moe
+    e, ff = mo.n_experts, mo.d_ff_expert
+    t = {
+        "router": ParamMeta((d, e), ("embed", None), "float32", "small"),
+        "wg": ParamMeta((e, d, ff), ("expert", "embed", "mlp"), pd),
+        "wu": ParamMeta((e, d, ff), ("expert", "embed", "mlp"), pd),
+        "wd": ParamMeta((e, ff, d), ("expert", "mlp", "embed"), pd),
+    }
+    if mo.n_shared_experts:
+        sff = mo.n_shared_experts * ff
+        t["shared"] = {
+            "wg": ParamMeta((d, sff), ("embed", "mlp"), pd),
+            "wu": ParamMeta((d, sff), ("embed", "mlp"), pd),
+            "wd": ParamMeta((sff, d), ("mlp", "embed"), pd),
+        }
+    return t
+
+
+def _topk_gates(logits, k: int, impl: str):
+    """(N,E) f32 logits -> (N,k) normalized gates + (N,k) int32 ids."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    if impl == "sample_sort":
+        from repro.kernels import ops as kops
+
+        vals, ids = kops.topk(probs, k)
+    else:
+        vals, ids = jax.lax.top_k(probs, k)
+    gates = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    return gates.astype(jnp.float32), ids.astype(jnp.int32)
+
+
+def _rank_in_expert_sort(ids_flat, e: int, impl: str):
+    """Within-expert rank of each slot via STABLE sort (steps 6-8 analogue).
+
+    Returns (rank (M,), counts (E,)).
+    """
+    m = ids_flat.shape[0]
+    if impl == "sample_sort":
+        perm = bucket_sort.argsort(ids_flat, _DISPATCH_SORT_CFG)
+    else:
+        perm = jnp.argsort(ids_flat, stable=True).astype(jnp.int32)
+    sorted_ids = jnp.take(ids_flat, perm)
+    counts = jnp.zeros((e,), jnp.int32).at[ids_flat].add(1)
+    starts = jnp.cumsum(counts) - counts  # (E,) exclusive
+    r_sorted = jnp.arange(m, dtype=jnp.int32) - jnp.take(starts, sorted_ids)
+    rank = jnp.zeros((m,), jnp.int32).at[perm].set(r_sorted)
+    return rank, counts
+
+
+def _rank_in_expert_onehot(ids_flat, e: int):
+    """GShard-style dense rank: cumsum over a one-hot (M,E) matrix."""
+    oh = jax.nn.one_hot(ids_flat, e, dtype=jnp.int32)  # (M,E)
+    rank = (jnp.cumsum(oh, axis=0) - oh)  # rank within expert
+    rank = jnp.sum(rank * oh, axis=-1)
+    counts = jnp.sum(oh, axis=0)
+    return rank.astype(jnp.int32), counts.astype(jnp.int32)
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x: (B,S,d) -> (out (B,S,d), aux_loss scalar)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    e, k = mo.n_experts, mo.top_k
+    # capacity rounded to 128: lane-aligned AND divisible by every
+    # data-axis size so the (E, capacity, d) buffers shard over "data"
+    # (a non-divisible capacity silently replicates the expert einsum
+    # across the data axis — measured 16x flop inflation).
+    cap = round_up(int(mo.capacity_factor * n * k / e) + 1, 128)
+
+    xf = x.reshape(n, d)
+    logits = xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    gates, ids = _topk_gates(logits, k, mo.dispatch)  # (N,k)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(ids, e, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = e * jnp.sum(f_e * jnp.mean(probs, axis=0))
+
+    ids_flat = ids.reshape(n * k)
+    if mo.dispatch == "onehot":
+        rank, counts = _rank_in_expert_onehot(ids_flat, e)
+    else:
+        rank, counts = _rank_in_expert_sort(ids_flat, e, mo.dispatch)
+
+    keep = rank < cap
+    dest = jnp.where(keep, ids_flat * cap + rank, e * cap)  # drop overflow
+
+    # relocation (step 8): one scatter builds the gather map
+    src = jnp.full((e * cap + 1,), n, jnp.int32)
+    slot_token = jnp.arange(n * k, dtype=jnp.int32) // k
+    src = src.at[dest].set(slot_token, mode="drop")[: e * cap]
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    x_e = jnp.take(x_pad, src, axis=0).reshape(e, cap, d)
+    x_e = constrain(x_e, "expert", "capacity", "embed")
+
+    # expert FFN (stacked einsum; experts sharded over "model")
+    dt = cfg.dtype
+    g = jnp.einsum("ecd,edf->ecf", x_e.astype(dt), p["wg"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", x_e.astype(dt), p["wu"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "expert", "capacity", "mlp")
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(dt))
+    y_e = constrain(y_e, "expert", "capacity", "embed")
+
+    # combine: gather back per slot, weight, sum over k
+    y_flat = y_e.reshape(e * cap, d)
+    y_pad = jnp.concatenate([y_flat, jnp.zeros((1, d), y_flat.dtype)], axis=0)
+    slot_y = jnp.take(y_pad, jnp.minimum(dest, e * cap), axis=0)  # (N*k, d)
+    w = jnp.where(keep, gates.reshape(n * k), 0.0).astype(jnp.float32)
+    out = jnp.sum(
+        (slot_y.astype(jnp.float32) * w[:, None]).reshape(n, k, d), axis=1
+    )
+
+    if mo.n_shared_experts:
+        sp = p["shared"]
+        sg = xf.astype(dt) @ sp["wg"].astype(dt)
+        su = xf.astype(dt) @ sp["wu"].astype(dt)
+        out = out + (
+            (jax.nn.silu(sg) * su) @ sp["wd"].astype(dt)
+        ).astype(jnp.float32)
+
+    return out.reshape(b, s, d).astype(cfg.dtype), aux

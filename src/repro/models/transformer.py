@@ -1,0 +1,325 @@
+"""Decoder-only LM assembly: periodic layer patterns, scan over periods.
+
+Covers dense GQA (starcoder2/llama/qwen2), MLA (minicpm3), MoE
+(moonshot/qwen3-moe), pure SSM (mamba2), and hybrid attn+mamba+MoE
+(jamba) through one periodic ``layer_pattern``.  Layers are stacked
+per-period and scanned (compile-time O(1) in depth) with configurable
+remat.  VLM (internvl2) is the same decoder with stub prefix embeddings
+concatenated ahead of the token embeddings.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LayerSlot, ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba2, moe
+from repro.models.meta import ParamMeta, is_meta, tree_map_meta
+from repro.sharding import constrain
+
+
+# ----------------------------------------------------------- templates
+def _slot_template(cfg: ModelConfig, slot: LayerSlot):
+    t = {}
+    if slot.mixer != "none":
+        t["ln"] = L.norm_template(cfg)
+    if slot.mixer == "attn":
+        t["attn"] = attn.gqa_template(cfg)
+    elif slot.mixer == "mla":
+        t["attn"] = attn.mla_template(cfg)
+    elif slot.mixer == "mamba":
+        t["mamba"] = mamba2.mamba_template(cfg)
+    if slot.ffn != "none":
+        t["ln2"] = L.norm_template(cfg)
+    if slot.ffn == "dense":
+        t["mlp"] = L.mlp_template(cfg)
+    elif slot.ffn == "moe":
+        t["moe"] = moe.moe_template(cfg)
+    return t
+
+
+def _stack_period(template, n_periods: int):
+    return tree_map_meta(
+        lambda m: ParamMeta(
+            (n_periods,) + m.shape, ("layers",) + m.axes, m.dtype, m.init, m.scale
+        ),
+        template,
+    )
+
+
+def lm_template(cfg: ModelConfig):
+    period = {
+        f"slot{i}": _slot_template(cfg, s) for i, s in enumerate(cfg.layer_pattern)
+    }
+    return {
+        "embed": L.embed_template(cfg),
+        "period": _stack_period(period, cfg.n_periods),
+        "final_norm": L.norm_template(cfg),
+    }
+
+
+# ------------------------------------------------------------- forward
+def _apply_slot_train(p, x, cfg: ModelConfig, slot: LayerSlot, positions):
+    aux = jnp.float32(0.0)
+    if slot.mixer == "attn":
+        x = x + attn.gqa_forward(p["attn"], L.norm_apply(p["ln"], x, cfg), cfg, positions)
+    elif slot.mixer == "mla":
+        x = x + attn.mla_forward(p["attn"], L.norm_apply(p["ln"], x, cfg), cfg, positions)
+    elif slot.mixer == "mamba":
+        x = x + mamba2.mamba_forward(p["mamba"], L.norm_apply(p["ln"], x, cfg), cfg)
+    if slot.ffn == "dense":
+        x = x + L.mlp_apply(p["mlp"], L.norm_apply(p["ln2"], x, cfg), cfg)
+    elif slot.ffn == "moe":
+        y, aux = moe.moe_apply(p["moe"], L.norm_apply(p["ln2"], x, cfg), cfg)
+        x = x + y
+    return x, aux
+
+
+def _period_train(cfg: ModelConfig, positions):
+    def fn(carry, pp):
+        x, aux = carry
+        for i, slot in enumerate(cfg.layer_pattern):
+            x, a = _apply_slot_train(pp[f"slot{i}"], x, cfg, slot, positions)
+            aux = aux + a
+        x = constrain(x, "batch", "seq", "embed")
+        return (x, aux), None
+
+    return fn
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _index_tree(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _n_stacked(tree) -> int:
+    return jax.tree.leaves(tree)[0].shape[0]
+
+
+def _layer_loop(cfg: ModelConfig, fn, carry, stacked_params):
+    """scan over periods, or an unrolled python loop (dry-run probes)."""
+    if cfg.scan_layers:
+        carry, _ = jax.lax.scan(fn, carry, stacked_params)
+        return carry
+    for i in range(_n_stacked(stacked_params)):
+        carry, _ = fn(carry, _index_tree(stacked_params, i))
+    return carry
+
+
+def _layer_loop_cache(cfg: ModelConfig, fn, x, stacked_params, caches):
+    """Like _layer_loop but threads/stacks per-period caches."""
+    if cfg.scan_layers:
+        if caches is None:
+            return jax.lax.scan(fn, x, stacked_params)
+        return jax.lax.scan(fn, x, (stacked_params, caches))
+    outs = []
+    for i in range(_n_stacked(stacked_params)):
+        pp = _index_tree(stacked_params, i)
+        inp = pp if caches is None else (pp, _index_tree(caches, i))
+        x, out = fn(x, inp)
+        outs.append(out)
+    return x, _stack_trees(outs)
+
+
+def lm_forward(params, tokens, cfg: ModelConfig, prefix_embeds=None):
+    """tokens (B,S) -> final hidden states (B,S',d), S' = P + S with prefix."""
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    bsz, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    fn = _remat(cfg, _period_train(cfg, positions))
+    (x, aux) = _layer_loop(cfg, fn, (x, jnp.float32(0.0)), params["period"])
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return x, aux
+
+
+def chunked_ce(params, x, targets, cfg: ModelConfig):
+    """CE summed over (B,S): sequence-chunked so full logits never live."""
+    b, s, d = x.shape
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0
+    nch = s // c
+
+    def chunk_loss(carry, inp):
+        xc, tc = inp  # (B,c,d), (B,c)
+        logits = L.unembed_apply(params["embed"], xc, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    if nch == 1:
+        total, _ = chunk_loss(jnp.float32(0.0), (x, targets))
+        return total
+    xs = (
+        x.reshape(b, nch, c, d).transpose(1, 0, 2, 3),
+        targets.reshape(b, nch, c).transpose(1, 0, 2),
+    )
+    if cfg.scan_layers:
+        total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), xs)
+        return total
+    total = jnp.float32(0.0)  # unrolled (dry-run probes)
+    for i in range(nch):
+        total, _ = chunk_loss(total, (xs[0][i], xs[1][i]))
+    return total
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, aux_weight: float = 0.01):
+    tokens = batch["tokens"]
+    targets = batch["targets"]
+    prefix = batch.get("prefix_embeds")
+    x, aux = lm_forward(params, tokens, cfg, prefix_embeds=prefix)
+    if prefix is not None:
+        x = x[:, prefix.shape[1] :, :]  # loss on text positions only
+    b, s, _ = x.shape
+    loss = chunked_ce(params, x, targets, cfg) / (b * s)
+    return loss + aux_weight * aux / max(cfg.n_layers, 1)
+
+
+# ------------------------------------------------------------- serving
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """Abstract-friendly cache pytree (stacked over periods)."""
+    dt = jnp.dtype(cfg.dtype)
+    ent = {}
+    for i, slot in enumerate(cfg.layer_pattern):
+        e = {}
+        if slot.mixer == "attn":
+            e = {
+                "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.dh), dt),
+                "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.dh), dt),
+            }
+        elif slot.mixer == "mla":
+            m = cfg.mla
+            e = {
+                "c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dt),
+            }
+        elif slot.mixer == "mamba":
+            e = mamba2.mamba_init_cache(cfg, batch, dt)
+        ent[f"slot{i}"] = e
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape), ent
+    )
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes tree matching init_cache output (for shardings)."""
+    ent = {}
+    for i, slot in enumerate(cfg.layer_pattern):
+        e = {}
+        if slot.mixer == "attn":
+            e = {"k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                 "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim")}
+        elif slot.mixer == "mla":
+            e = {"c_kv": ("layers", "batch", "kv_seq", None),
+                 "k_rope": ("layers", "batch", "kv_seq", None)}
+        elif slot.mixer == "mamba":
+            e = {"conv": ("layers", "batch", None, "ssm_inner"),
+                 "ssm": ("layers", "batch", None, None, None)}
+        ent[f"slot{i}"] = e
+    return ent
+
+
+def _apply_slot_decode(p, x, cfg, slot, cache, pos):
+    if slot.mixer == "attn":
+        y, cache2 = attn.gqa_decode(p["attn"], L.norm_apply(p["ln"], x, cfg), cfg, cache, pos)
+        x = x + y
+    elif slot.mixer == "mla":
+        y, cache2 = attn.mla_decode(p["attn"], L.norm_apply(p["ln"], x, cfg), cfg, cache, pos)
+        x = x + y
+    elif slot.mixer == "mamba":
+        y, cache2 = mamba2.mamba_decode(p["mamba"], L.norm_apply(p["ln"], x, cfg), cfg, cache)
+        x = x + y
+    else:
+        cache2 = cache
+    if slot.ffn == "dense":
+        x = x + L.mlp_apply(p["mlp"], L.norm_apply(p["ln2"], x, cfg), cfg)
+    elif slot.ffn == "moe":
+        y, _ = moe.moe_apply(p["moe"], L.norm_apply(p["ln2"], x, cfg), cfg)
+        x = x + y
+    return x, cache2
+
+
+def decode_step(params, token, caches, pos, cfg: ModelConfig):
+    """token (B,1) int32; pos scalar int32 -> (logits (B,V), new caches)."""
+    x = L.embed_apply(params["embed"], token, cfg)
+
+    def fn(x, inp):
+        pp, cache = inp
+        new = {}
+        for i, slot in enumerate(cfg.layer_pattern):
+            x, new[f"slot{i}"] = _apply_slot_decode(
+                pp[f"slot{i}"], x, cfg, slot, cache[f"slot{i}"], pos
+            )
+        return x, new
+
+    x, new_caches = _layer_loop_cache(cfg, fn, x, params["period"], caches)
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x, cfg)[:, 0, :]
+    return logits, new_caches
+
+
+def _apply_slot_prefill(p, x, cfg, slot, positions, cache_len):
+    if slot.mixer == "attn":
+        y, cache = attn.gqa_prefill(
+            p["attn"], L.norm_apply(p["ln"], x, cfg), cfg, positions, cache_len
+        )
+        x = x + y
+    elif slot.mixer == "mla":
+        y, cache = attn.mla_prefill(
+            p["attn"], L.norm_apply(p["ln"], x, cfg), cfg, positions, cache_len
+        )
+        x = x + y
+    elif slot.mixer == "mamba":
+        y, cache = mamba2.mamba_forward(
+            p["mamba"], L.norm_apply(p["ln"], x, cfg), cfg, return_state=True
+        )
+        x = x + y
+    else:
+        cache = {}
+    if slot.ffn == "dense":
+        x = x + L.mlp_apply(p["mlp"], L.norm_apply(p["ln2"], x, cfg), cfg)
+    elif slot.ffn == "moe":
+        y, _ = moe.moe_apply(p["moe"], L.norm_apply(p["ln2"], x, cfg), cfg)
+        x = x + y
+    return x, cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int, prefix_embeds=None):
+    """tokens (B,S) -> (last-position logits (B,V), caches for decode)."""
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+
+    def fn(x, pp):
+        caches = {}
+        for i, slot in enumerate(cfg.layer_pattern):
+            x, caches[f"slot{i}"] = _apply_slot_prefill(
+                pp[f"slot{i}"], x, cfg, slot, positions, cache_len
+            )
+        x = constrain(x, "batch", "seq", "embed")
+        return x, caches
+
+    x, caches = _layer_loop_cache(cfg, fn, x, params["period"], None)
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x[:, -1:, :], cfg)[:, 0, :]
+    return logits, caches

@@ -1,0 +1,12 @@
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import cosine_warmup
+from repro.optim.compress import compress_grads_int8, decompress_grads_int8
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_warmup",
+    "compress_grads_int8",
+    "decompress_grads_int8",
+]

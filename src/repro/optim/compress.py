@@ -1,0 +1,66 @@
+"""Int8 gradient compression with error feedback (DP all-reduce trick).
+
+For bandwidth-bound data-parallel training: quantize each gradient leaf
+to int8 with a per-leaf f32 scale before the cross-replica all-reduce,
+keep the quantization residual locally and add it back into the next
+step's gradient (error feedback, Seide et al. 2014 / Karimireddy et al.
+2019).  4x fewer bytes over the data axis; unbiased-in-the-limit via the
+residual.  Used by the shard_map DP path in runtime/train driver when
+ParallelConfig.compress_grads is set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads_int8(grads, residual=None):
+    """grads -> (q_int8 tree, scales tree, new_residual tree)."""
+
+    def comp(g, r):
+        gf = g.astype(jnp.float32) + (r if r is not None else 0.0)
+        scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        res = gf - q.astype(jnp.float32) * scale
+        return q, scale, res
+
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    out = jax.tree.map(comp, grads, residual)
+    istup = lambda x: isinstance(x, tuple)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=istup)
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=istup)
+    r = jax.tree.map(lambda t: t[2], out, is_leaf=istup)
+    return q, s, r
+
+
+def decompress_grads_int8(q, scales):
+    return jax.tree.map(
+        lambda qq, ss: qq.astype(jnp.float32) * ss, q, scales
+    )
+
+
+def allreduce_compressed(grads, axis_name, residual=None):
+    """shard_map body helper: int8 psum with error feedback.
+
+    Scales are psum-maxed first so all replicas dequantize identically.
+    """
+    def comp(g, r):
+        gf = g.astype(jnp.float32) + r
+        local_scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+        scale = jax.lax.pmax(local_scale, axis_name)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        res = gf - q.astype(jnp.float32) * scale
+        # int8 psum accumulates in int32 to avoid overflow
+        tot = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(1, axis_name)
+        return tot.astype(jnp.float32) * scale / n, res
+
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    out = jax.tree.map(comp, grads, residual)
+    istup = lambda x: isinstance(x, tuple)
+    mean = jax.tree.map(lambda t: t[0], out, is_leaf=istup)
+    res = jax.tree.map(lambda t: t[1], out, is_leaf=istup)
+    return mean, res

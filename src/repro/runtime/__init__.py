@@ -1,0 +1,3 @@
+from repro.runtime.driver import TrainDriver, StragglerMonitor
+
+__all__ = ["TrainDriver", "StragglerMonitor"]

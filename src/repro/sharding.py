@@ -1,0 +1,133 @@
+"""Logical-axis sharding rules (MaxText-style) + activation constraints.
+
+Every parameter carries a tuple of LOGICAL axis names; ``resolve`` maps
+them to mesh axes through an ordered rule list.  A rule applies only if
+(a) its mesh axes are not already used by this tensor and (b) the dim
+size is divisible by the mesh axes' total size — so e.g. kv_heads=2
+falls through on a 16-way model axis and the ("head_dim", "model")
+fallback shards the head dimension instead.
+
+Activations are constrained at key points via ``constrain`` which
+no-ops when no mesh context is installed (CPU unit tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def default_rules(fsdp: bool, batch_axes=("data",), fsdp_axes=("data",)):
+    """PRIORITY-ordered (logical, mesh) rules.
+
+    ``resolve`` walks rules in order (not tensor dims), so earlier
+    entries win mesh axes.  Later same-name entries are fallbacks.
+    """
+    return [
+        ("batch", tuple(batch_axes)),
+        ("vocab", "model"),
+        ("expert", "model"),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        # sequence-TP attention: when the head counts don't divide the
+        # model axis (llama 24H, whisper 20H, minicpm 40H on 16-way TP),
+        # shard the attention activations' seq dim instead — local S^2
+        # score blocks with one small q/k/v reshard, instead of
+        # cross-device partial-sum'd score tensors (measured ~400x less
+        # collective traffic on prefill_32k).
+        ("qk_seq", "model"),
+        ("mlp", "model"),
+        ("ssm_inner", "model"),
+        ("head_dim", "model"),  # weight-side fallback TP
+        # KV-cache sequence dim: prefer the widest free sharding —
+        # flash-decode style TP over keys (tiny per-step stats comms)
+        # beats sharding tiny KV-head counts or replicating the cache.
+        ("kv_seq", ("data", "model")),
+        ("kv_seq", "model"),
+        ("kv_seq", tuple(batch_axes)),
+        ("embed", tuple(fsdp_axes) if fsdp else None),
+        ("seq", None),
+        ("layers", None),
+        ("ssm_state", None),
+        ("conv", None),
+        ("lora", None),
+        # MoE dispatch buffers: capacity rows are independent tokens —
+        # shard them over the data axes or every data replica computes
+        # the full global expert batch (measured 16x flop inflation).
+        ("capacity", tuple(batch_axes)),
+    ]
+
+
+def _axes_tuple(mesh_ax):
+    return (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+
+
+def resolve(axes, rules, axis_sizes, shape=None) -> P:
+    """Logical axes -> PartitionSpec, walked in RULE-PRIORITY order.
+
+    For each rule (in order), assign its mesh axes to the first
+    still-unresolved tensor dim with that logical name, subject to
+    (a) mesh-axis reuse and (b) divisibility of the dim size.  Rule
+    order therefore expresses preference ACROSS dims (e.g. "shard heads
+    over model; only if that fails, shard the attention seq dim").
+
+    axes: tuple of logical names (or None) per dim.
+    rules: priority list of (logical, mesh axis | tuple | None).
+    axis_sizes: mesh axis name -> size.
+    shape: optional concrete dims for divisibility checks.
+    """
+    used: set[str] = set()
+    parts: list = [None] * len(axes)
+    resolved = [ax is None for ax in axes]
+    for name, mesh_ax in rules:
+        if mesh_ax is None:
+            continue
+        mt = _axes_tuple(mesh_ax)
+        for i, ax in enumerate(axes):
+            if resolved[i] or ax != name:
+                continue
+            if any(a in used for a in mt):
+                continue
+            total = math.prod(axis_sizes.get(a, 1) for a in mt)
+            if shape is not None and shape[i] % total != 0:
+                continue
+            parts[i] = mesh_ax
+            used.update(mt)
+            resolved[i] = True
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh = None
+        self.rules = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, rules):
+    """Install mesh+rules so models can emit sharding constraints."""
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, list(rules)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical axes; no-op without context."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    sizes = dict(_CTX.mesh.shape)
+    spec = resolve(tuple(axes), _CTX.rules, sizes, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))

@@ -1,0 +1,10 @@
+# NOTE: no XLA_FLAGS here on purpose — unit tests and benches must see
+# the real single CPU device; only launch/dryrun.py forces 512 host
+# devices (and distributed tests spawn subprocesses with their own env).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,102 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles, swept over
+shapes and dtypes (the per-kernel allclose contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("m,t", [(1, 128), (3, 256), (8, 512), (2, 1024)])
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.float32])
+def test_bitonic_sort_tiles(rng, m, t, dtype):
+    if dtype == np.float32:
+        k = rng.normal(size=(m, t)).astype(dtype)
+    else:
+        k = rng.integers(0, 97, size=(m, t)).astype(dtype)  # duplicates
+    ku = ops.to_sortable(jnp.asarray(k))
+    v = jnp.tile(jnp.arange(t, dtype=jnp.int32), (m, 1))
+    sk_p, sv_p = ops.sort_tiles(ku, v, impl="pallas", interpret=True)
+    sk_r, sv_r = ref.sort_tiles_kv(ku, v)
+    np.testing.assert_array_equal(np.asarray(sk_p), np.asarray(sk_r))
+    np.testing.assert_array_equal(np.asarray(sv_p), np.asarray(sv_r))
+    back = np.asarray(ops.from_sortable(sk_p, jnp.dtype(dtype)))
+    np.testing.assert_array_equal(back, np.sort(k, axis=-1))
+
+
+def test_bitonic_stability(rng):
+    k = rng.integers(0, 3, size=(4, 256)).astype(np.int32)
+    ku = ops.to_sortable(jnp.asarray(k))
+    v = jnp.tile(jnp.arange(256, dtype=jnp.int32), (4, 1))
+    _, sv = ops.sort_tiles(ku, v, impl="pallas", interpret=True)
+    for i in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(sv[i]), np.argsort(k[i], kind="stable")
+        )
+
+
+@pytest.mark.parametrize("m,t,s", [(2, 256, 7), (4, 512, 15), (1, 128, 1)])
+def test_splitter_ranks(rng, m, t, s):
+    k = rng.integers(0, 1000, size=(m, t)).astype(np.int32)
+    ku = ops.to_sortable(jnp.asarray(k))
+    v = jnp.tile(jnp.arange(t, dtype=jnp.int32), (m, 1))
+    spk = ops.to_sortable(
+        jnp.asarray(np.sort(rng.integers(0, 1000, size=(m, s)), axis=1).astype(np.int32))
+    )
+    spv = jnp.zeros((m, s), jnp.int32)
+    r_p = ops.splitter_ranks(ku, v, spk, spv, impl="pallas", interpret=True)
+    r_r = ref.splitter_ranks(ku, v, spk, spv)
+    np.testing.assert_array_equal(np.asarray(r_p), np.asarray(r_r))
+    # oracle vs numpy searchsorted per row
+    for i in range(m):
+        expect = np.searchsorted(np.sort(k[i]), np.sort(
+            np.asarray(ops.from_sortable(spk[i], jnp.int32))), side="left")
+        sk = np.sort(k[i])
+        # ranks computed against the unsorted tile equal counts of x < sp
+        got = np.asarray(r_r[i])
+        manual = [(k[i] < spv_i).sum() for spv_i in
+                  np.asarray(ops.from_sortable(spk[i], jnp.int32))]
+        np.testing.assert_array_equal(got, manual)
+
+
+@pytest.mark.parametrize("r,c,k", [(8, 64, 4), (256, 128, 8), (64, 32, 32)])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_topk(rng, r, c, k, dtype):
+    if dtype == np.float32:
+        x = rng.normal(size=(r, c)).astype(dtype)
+    else:
+        x = rng.integers(-50, 50, size=(r, c)).astype(dtype)
+    xa = jnp.asarray(x)
+    tv, ti = ops.topk(xa, k, impl="pallas", interpret=True)
+    lv, li = jax.lax.top_k(xa, k)
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(li))
+    np.testing.assert_allclose(np.asarray(tv, np.float64), np.asarray(lv, np.float64))
+
+
+def test_topk_ties(rng):
+    x = jnp.asarray(rng.integers(0, 3, size=(32, 64)).astype(np.float32))
+    tv, ti = ops.topk(x, 8, impl="pallas", interpret=True)
+    lv, li = jax.lax.top_k(x, 8)
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(li))
+
+
+def test_float_canonicalization_total_order():
+    f = np.array([np.nan, np.inf, -np.inf, -0.0, 0.0, 1.5, -1.5, 1e-39,
+                  -1e-39, 3.4e38], dtype=np.float32)
+    u = ops.to_sortable(jnp.asarray(f))
+    back = np.asarray(ops.from_sortable(u, jnp.float32))
+    same = (back == f) | (np.isnan(back) & np.isnan(f))
+    assert same.all()
+    order = np.argsort(np.asarray(u))
+    vals = f[order]
+    finite = vals[np.isfinite(vals)]
+    assert (np.diff(finite) >= 0).all()
+
+
+def test_sortable_roundtrip_int():
+    x = jnp.asarray(np.array([-(2**31), -1, 0, 1, 2**31 - 1], np.int32))
+    u = ops.to_sortable(x)
+    assert (np.diff(np.asarray(u).astype(np.uint64)) > 0).all()
+    np.testing.assert_array_equal(np.asarray(ops.from_sortable(u, jnp.int32)), np.asarray(x))

@@ -1,0 +1,208 @@
+"""Model-layer correctness: attention vs naive reference, mamba SSD vs
+naive recurrence, MoE dispatch equivalence across impls."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import LayerSlot, ModelConfig, MoEConfig, SSMConfig
+from repro.models import attention as A
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models.meta import init_params
+
+
+# ----------------------------------------------------------- attention
+def naive_attention(q, k, v, causal):
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    kk = np.repeat(np.asarray(k, np.float32), g, axis=2)
+    vv = np.repeat(np.asarray(v, np.float32), g, axis=2)
+    qq = np.asarray(q, np.float32)
+    s = np.einsum("bqhd,bkhd->bhqk", qq, kk) / np.sqrt(d)
+    if causal:
+        mask = np.tril(np.ones((sq, k.shape[1]), bool))
+        s = np.where(mask[None, None], s, -np.inf)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("sq,chunk", [(64, 16), (64, 64), (60, 16)])
+def test_chunked_attention_matches_naive(rng, causal, sq, chunk):
+    b, h, kh, d = 2, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, sq, kh, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, sq, kh, d)).astype(np.float32))
+    out = A.chunked_attention(q, k, v, chunk=chunk, causal=causal)
+    ref = naive_attention(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_unroll_equals_scan(rng):
+    b, s, h, kh, d = 1, 64, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kh, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, kh, d)).astype(np.float32))
+    a = A.chunked_attention(q, k, v, chunk=16, causal=True, unroll=False)
+    b_ = A.chunked_attention(q, k, v, chunk=16, causal=True, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------------- mamba SSD
+def naive_ssd(x, dt, a, b, c, d_skip):
+    """Sequential recurrence oracle.  x:(B,S,H,P) dt:(B,S,H) a:(H,)
+    b,c:(B,S,G,N)."""
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    hpg = h // g
+    y = np.zeros_like(x, dtype=np.float64)
+    st = np.zeros((bs, h, p, n), np.float64)
+    for t in range(s):
+        dec = np.exp(dt[:, t] * a[None, :])  # (B,H)
+        bh = np.repeat(b[:, t], hpg, axis=1)  # (B,H,N)
+        ch = np.repeat(c[:, t], hpg, axis=1)
+        st = st * dec[..., None, None] + np.einsum(
+            "bh,bhp,bhn->bhpn", dt[:, t], x[:, t], bh
+        )
+        y[:, t] = np.einsum("bhpn,bhn->bhp", st, ch) + d_skip[None, :, None] * x[:, t]
+    return y, st
+
+
+def _mamba_cfg():
+    return ModelConfig(
+        name="m", n_layers=1, d_model=32, n_heads=1, n_kv_heads=1, d_ff=0,
+        vocab=64, layer_pattern=(LayerSlot("mamba", "none"),),
+        ssm=SSMConfig(d_state=8, d_conv=4, expand=2, head_dim=8, chunk=8),
+        param_dtype="float32", dtype="float32", scan_layers=True,
+    )
+
+
+def test_ssd_chunked_matches_naive_recurrence(rng):
+    cfg = _mamba_cfg()
+    ss = cfg.ssm
+    d_inner, n_heads, conv_dim, _ = M.dims(cfg)
+    bsz, s = 2, 32
+    x = rng.normal(size=(bsz, s, n_heads, ss.head_dim)).astype(np.float32)
+    dt = np.abs(rng.normal(size=(bsz, s, n_heads))).astype(np.float32) * 0.5
+    a = -np.abs(rng.normal(size=(n_heads,))).astype(np.float32)
+    b = rng.normal(size=(bsz, s, ss.n_groups, ss.d_state)).astype(np.float32)
+    c = rng.normal(size=(bsz, s, ss.n_groups, ss.d_state)).astype(np.float32)
+    dskip = rng.normal(size=(n_heads,)).astype(np.float32)
+
+    # chunked path, extracted from mamba_forward's math
+    q = ss.chunk
+    nc = s // q
+    da = dt * a[None, None, :]
+    dac = da.reshape(bsz, nc, q, n_heads)
+    da_cs = np.cumsum(dac, axis=2)
+    xdt = (x * dt[..., None]).reshape(bsz, nc, q, n_heads, ss.head_dim)
+    bc = b.reshape(bsz, nc, q, ss.n_groups, ss.d_state)
+    cc = c.reshape(bsz, nc, q, ss.n_groups, ss.d_state)
+    li = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]
+    mask = (np.arange(q)[:, None] >= np.arange(q)[None, :])[None, None, :, :, None]
+    l = np.where(mask, np.exp(np.where(mask, li, 0.0)), 0.0)
+    hpg = n_heads // ss.n_groups
+    cb = np.repeat(np.einsum("bcign,bcjgn->bcijg", cc, bc), hpg, axis=-1)
+    y_diag = np.einsum("bcijh,bcijh,bcjhp->bcihp", cb, l, xdt)
+    decay_states = np.exp(da_cs[:, :, -1:, :] - da_cs)
+    states = np.einsum("bcqgn,bcqh,bcqhp->bchpn", bc, decay_states, xdt)
+    chunk_decay = np.exp(da_cs[:, :, -1, :])
+    h = np.zeros((bsz, n_heads, ss.head_dim, ss.d_state))
+    hs = []
+    for i in range(nc):
+        hs.append(h)
+        h = h * chunk_decay[:, i][..., None, None] + states[:, i]
+    h_starts = np.stack(hs, axis=1)
+    cch = np.repeat(cc, hpg, axis=3)
+    y_off = np.einsum("bcqhn,bchpn,bcqh->bcqhp", cch, h_starts, np.exp(da_cs))
+    y_chunked = (y_diag + y_off).reshape(bsz, s, n_heads, ss.head_dim) + \
+        dskip[None, None, :, None] * x
+
+    y_naive, st_naive = naive_ssd(x, dt, a, b, c, dskip)
+    np.testing.assert_allclose(y_chunked, y_naive, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h, st_naive, rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_decode_matches_forward(rng):
+    cfg = _mamba_cfg()
+    p = init_params(M.mamba_template(cfg), jax.random.PRNGKey(0))
+    bsz, s = 2, 16
+    x = jnp.asarray(rng.normal(size=(bsz, s, cfg.d_model)).astype(np.float32))
+    y_full, cache = M.mamba_forward(p, x, cfg, return_state=True)
+    # replay through decode steps
+    dcache = M.mamba_init_cache(cfg, bsz, jnp.float32)
+    ys = []
+    for t in range(s):
+        y, dcache = M.mamba_decode(p, x[:, t : t + 1], cfg, dcache)
+        ys.append(y)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_step), np.asarray(y_full), rtol=2e-4, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(dcache["ssm"]), np.asarray(cache["ssm"]), rtol=2e-4, atol=2e-4
+    )
+
+
+# ----------------------------------------------------------------- MoE
+def _moe_cfg(dispatch):
+    return ModelConfig(
+        name="moe", n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+        vocab=64, layer_pattern=(LayerSlot("attn", "moe"),),
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=16,
+                      capacity_factor=8.0, dispatch=dispatch),
+        param_dtype="float32", dtype="float32",
+    )
+
+
+def test_moe_dispatch_impls_agree(rng):
+    cfgs = {d: _moe_cfg(d) for d in ("sample_sort", "xla_sort", "onehot")}
+    p = init_params(MOE.moe_template(cfgs["sample_sort"]), jax.random.PRNGKey(1))
+    x = jnp.asarray(rng.normal(size=(2, 16, 32)).astype(np.float32))
+    outs = {}
+    for d, cfg in cfgs.items():
+        y, aux = MOE.moe_apply(p, x, cfg)
+        outs[d] = np.asarray(y)
+        assert np.isfinite(outs[d]).all()
+    np.testing.assert_allclose(outs["sample_sort"], outs["xla_sort"], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(outs["sample_sort"], outs["onehot"], rtol=1e-5, atol=1e-5)
+
+
+def test_moe_capacity_drops_are_masked(rng):
+    cfg = _moe_cfg("sample_sort")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.05)
+    )
+    p = init_params(MOE.moe_template(cfg), jax.random.PRNGKey(1))
+    x = jnp.asarray(rng.normal(size=(2, 64, 32)).astype(np.float32))
+    y, aux = MOE.moe_apply(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_moe_dense_vs_sorted_dispatch_reference(rng):
+    """Sorted dispatch == brute-force per-expert gather reference."""
+    cfg = _moe_cfg("sample_sort")
+    p = init_params(MOE.moe_template(cfg), jax.random.PRNGKey(2))
+    x = jnp.asarray(rng.normal(size=(1, 32, 32)).astype(np.float32))
+    y, _ = MOE.moe_apply(p, x, cfg)
+    # reference: explicit loop over tokens/experts
+    xf = np.asarray(x).reshape(32, 32)
+    logits = xf @ np.asarray(p["router"], np.float32)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    ref = np.zeros_like(xf)
+    for t in range(32):
+        top = np.argsort(-probs[t])[: cfg.moe.top_k]
+        w = probs[t, top] / probs[t, top].sum()
+        for e, wi in zip(top, w):
+            g = xf[t] @ np.asarray(p["wg"][e])
+            u = xf[t] @ np.asarray(p["wu"][e])
+            h = (g / (1 + np.exp(-g))) * u
+            ref[t] += wi * (h @ np.asarray(p["wd"][e]))
+    np.testing.assert_allclose(np.asarray(y).reshape(32, 32), ref, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,87 @@
+"""Hypothesis property tests on the system's core invariants:
+
+  * sort output is sorted AND a permutation of the input (any dtype/dist)
+  * stability (equal keys keep input order)
+  * the paper's guaranteed bucket bound: every round's max bucket fill
+    <= capacity and the relocation scatter never drops an element
+  * partial top-k == lax.top_k for arbitrary inputs
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bucket_sort, partial_sort
+from repro.core.sort_config import SortConfig
+
+CFG = SortConfig(tile=128, s=8, direct_max=256, impl="xla")
+
+ints = st.lists(
+    st.integers(min_value=-(2**31), max_value=2**31 - 1), min_size=1, max_size=3000
+)
+small_ints = st.lists(st.integers(min_value=0, max_value=5), min_size=1, max_size=3000)
+floats = st.lists(
+    st.floats(width=32, allow_nan=True, allow_infinity=True),
+    min_size=1, max_size=2000,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ints)
+def test_sort_is_sorted_permutation(xs):
+    x = np.asarray(xs, np.int32)
+    out = np.asarray(bucket_sort.sort(jnp.asarray(x), CFG))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+@settings(max_examples=25, deadline=None)
+@given(small_ints)
+def test_sort_stable_under_duplicates(xs):
+    x = np.asarray(xs, np.int32)
+    perm = np.asarray(bucket_sort.argsort(jnp.asarray(x), CFG))
+    np.testing.assert_array_equal(perm, np.argsort(x, kind="stable"))
+
+
+@settings(max_examples=15, deadline=None)
+@given(floats)
+def test_sort_floats_total_order(xs):
+    x = np.asarray(xs, np.float32)
+    out = np.asarray(bucket_sort.sort(jnp.asarray(x), CFG))
+    ref = np.sort(x)  # numpy: NaNs last; ours: -NaN first, +NaN last
+    a = np.sort(out[~np.isnan(out)])
+    b = ref[~np.isnan(ref)]
+    np.testing.assert_array_equal(a, b)
+    assert np.isnan(out).sum() == np.isnan(ref).sum()
+
+
+@settings(max_examples=15, deadline=None)
+@given(small_ints)
+def test_bucket_bound_guarantee(xs):
+    """The paper's core claim: deterministic sampling => bucket fill is
+    bounded by the static capacity, for ANY input (worst cases included)."""
+    x = np.asarray(xs, np.int32)
+    if len(x) <= CFG.direct_max:
+        x = np.tile(x, (CFG.direct_max // max(len(x), 1)) + 2)[: CFG.direct_max * 3]
+    srt, perm, stats = bucket_sort.sort_with_stats(jnp.asarray(x), CFG)
+    assert len(stats) >= 1
+    for stt in stats:
+        max_fill = int(np.asarray(stt["totals"]).max())
+        assert max_fill <= stt["capacity"], (max_fill, stt["capacity"])
+        assert int(np.asarray(stt["max_within"])) < stt["capacity"]
+    np.testing.assert_array_equal(np.asarray(srt), np.sort(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(st.floats(width=32, allow_nan=False, allow_infinity=False),
+             min_size=1, max_size=1500),
+    st.integers(min_value=1, max_value=64),
+)
+def test_partial_topk_matches_lax(xs, k):
+    x = np.asarray(xs, np.float32)
+    k = min(k, len(x))
+    tv, ti = partial_sort.topk(jnp.asarray(x), k, CFG)
+    lv, li = jax.lax.top_k(jnp.asarray(x), k)
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(li))
+    np.testing.assert_array_equal(np.asarray(tv), np.asarray(lv))

@@ -1,0 +1,198 @@
+"""Substrates: optimizer, schedules, data pipeline, checkpointing,
+fault-tolerant runtime (crash -> restart determinism), sharding rules."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as shd
+from repro.config import OptimizerConfig, ParallelConfig
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+from repro.data import DataLoader, MemmapDataset, SyntheticDataset
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_warmup
+from repro.runtime import StragglerMonitor, TrainDriver
+from repro.runtime.driver import fit_parallel_to_devices
+
+
+# ------------------------------------------------------------ optimizer
+def test_adamw_matches_reference(rng):
+    opt = OptimizerConfig(lr=1e-2, beta1=0.9, beta2=0.99, eps=1e-8, weight_decay=0.1)
+    p = {"w": jnp.asarray(rng.normal(size=(8,)).astype(np.float32))}
+    g = {"w": jnp.asarray(rng.normal(size=(8,)).astype(np.float32))}
+    st = adamw_init(p, opt)
+    p2, st2 = adamw_update(p, g, st, opt, jnp.float32(1e-2))
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.01 * np.asarray(g["w"]) ** 2
+    mh, vh = m / (1 - 0.9), v / (1 - 0.99)
+    ref = np.asarray(p["w"]) - 1e-2 * (mh / (np.sqrt(vh) + 1e-8) + 0.1 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(p2["w"]), ref, rtol=1e-5)
+    assert int(st2["step"]) == 1
+
+
+def test_clip_and_schedule():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gnorm = clip_by_global_norm(g, 1.0)
+    assert abs(float(gnorm) - 20.0) < 1e-4
+    np.testing.assert_allclose(
+        np.asarray(clipped["a"]), np.full(4, 0.5), rtol=1e-5
+    )
+    lrs = [float(cosine_warmup(jnp.int32(s), 1.0, 10, 100)) for s in [0, 5, 10, 100]]
+    assert lrs[0] == 0.0 and abs(lrs[1] - 0.5) < 1e-5 and lrs[2] >= lrs[3]
+
+
+def test_adamw_bf16_moments():
+    opt = OptimizerConfig(moment_dtype="bfloat16")
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = adamw_init(p, opt)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+    p2, st2 = adamw_update(p, {"w": jnp.ones((4,), jnp.bfloat16)}, st, opt, 1e-3)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(p2["w"], np.float32)).all()
+
+
+# ----------------------------------------------------------------- data
+def test_synthetic_deterministic_seekable():
+    ds = SyntheticDataset(vocab=100, seq_len=16, batch=4, seed=7)
+    b1, b2 = ds.batch_at(42), ds.batch_at(42)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(ds.batch_at(43)["tokens"], b1["tokens"])
+    np.testing.assert_array_equal(b1["targets"][:, :-1], b1["tokens"][:, 1:])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 100
+
+
+def test_memmap_dataset(tmp_path):
+    toks = np.arange(17 * 40, dtype=np.int32) % 97
+    path = str(tmp_path / "tokens.bin")
+    toks.tofile(path)
+    ds = MemmapDataset(path, seq_len=16, batch=2, shard_idx=1, n_shards=2)
+    b = ds.batch_at(0)
+    assert b["tokens"].shape == (2, 16)
+    np.testing.assert_array_equal(b["tokens"], ds.batch_at(0)["tokens"])
+    b0 = MemmapDataset(path, 16, 2, 0, 2).batch_at(0)
+    assert not np.array_equal(b0["tokens"], b["tokens"])  # shards differ
+
+
+def test_loader_prefetch_order():
+    ds = SyntheticDataset(vocab=50, seq_len=8, batch=2, seed=0)
+    dl = DataLoader(ds, start_step=5, prefetch=2)
+    got = [next(dl) for _ in range(3)]
+    dl.close()
+    for i, b in enumerate(got):
+        np.testing.assert_array_equal(b["tokens"], ds.batch_at(5 + i)["tokens"])
+
+
+# ----------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_atomic_gc(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(6).reshape(2, 3), "n": {"b": jnp.float32(3.5)}}
+    for step in (1, 2, 3, 4):
+        save(d, step, tree)
+    assert latest_step(d) == 4
+    # partial write must be ignored
+    os.makedirs(os.path.join(d, "step_00000099.tmp"), exist_ok=True)
+    assert latest_step(d) == 4
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    got = restore(d, 4, like)
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+    assert float(got["n"]["b"]) == 3.5
+    from repro.checkpoint.ckpt import gc_keep_k
+    gc_keep_k(d, 2)
+    assert latest_step(d) == 4
+    assert not os.path.exists(os.path.join(d, "step_00000001"))
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path / "ck")
+    ck = AsyncCheckpointer(d, keep=2)
+    for s in (10, 20, 30):
+        ck.save(s, {"x": jnp.full((4,), s)})
+    ck.wait()
+    assert latest_step(d) == 30
+    got = restore(d, 30, {"x": jax.ShapeDtypeStruct((4,), jnp.int32)})
+    assert int(np.asarray(got["x"])[0]) == 30
+
+
+# -------------------------------------------------------------- runtime
+def _toy_driver(tmp_path, ckpt_every=5):
+    def init_state():
+        return {"w": jnp.float32(0.0), "step": jnp.int32(0)}
+
+    def step_fn(state, batch):
+        w = state["w"] + float(batch["tokens"].mean())
+        return {"w": w, "step": state["step"] + 1}, {"loss": w}
+
+    ds = SyntheticDataset(vocab=10, seq_len=4, batch=2, seed=1)
+    return TrainDriver(
+        step_fn, init_state, ds, ckpt_dir=os.path.join(str(tmp_path), "ck"),
+        ckpt_every=ckpt_every, log_every=100, log_fn=lambda *_: None,
+    )
+
+
+def test_driver_crash_restart_deterministic(tmp_path):
+    class Boom(RuntimeError):
+        pass
+
+    drv = _toy_driver(tmp_path)
+
+    def injector(step):
+        if step == 12:
+            raise Boom()
+
+    try:
+        drv.run(20, fault_injector=injector)
+        raise AssertionError("should have crashed")
+    except Boom:
+        pass
+    # restart: resumes from step 10 checkpoint and replays the same data
+    drv2 = _toy_driver(tmp_path)
+    state, _ = drv2.run(20)
+    drv3 = _toy_driver(str(tmp_path) + "_clean")
+    state_clean, _ = drv3.run(20)
+    np.testing.assert_allclose(
+        float(state["w"]), float(state_clean["w"]), rtol=1e-6
+    )
+
+
+def test_straggler_monitor(tmp_path):
+    hb = str(tmp_path / "hb.json")
+    mon = StragglerMonitor(window=20, z_thresh=3.0, heartbeat_path=hb)
+    for i in range(15):
+        assert not mon.record(i, 0.10 + 0.001 * (i % 3))
+    assert mon.record(15, 1.0)  # 10x outlier
+    assert mon.flagged and mon.flagged[0][0] == 15
+    assert os.path.exists(hb)
+
+
+def test_elastic_mesh_fit():
+    p = ParallelConfig(mesh_shape=(2, 16, 16), mesh_axes=("pod", "data", "model"))
+    p2 = fit_parallel_to_devices(p, 256)  # lost a pod
+    assert dict(zip(p2.mesh_axes, p2.mesh_shape))["model"] == 16
+    assert np.prod(p2.mesh_shape) == 256
+    p3 = fit_parallel_to_devices(p, 1024)  # doubled
+    assert np.prod(p3.mesh_shape) == 1024
+
+
+# ------------------------------------------------------------- sharding
+def test_resolve_rules_divisibility_and_fallback():
+    rules = shd.default_rules(fsdp=True, batch_axes=("data",), fsdp_axes=("data",))
+    sizes = {"data": 16, "model": 16}
+    # kv_heads=2 not divisible -> head_dim fallback takes "model"
+    spec = shd.resolve(("embed", "kv_heads", "head_dim"), rules, sizes,
+                       shape=(1024, 2, 128))
+    assert spec == jax.sharding.PartitionSpec("data", None, "model")
+    # heads divisible -> heads gets model, head_dim left alone
+    spec = shd.resolve(("embed", "heads", "head_dim"), rules, sizes,
+                       shape=(1024, 48, 128))
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+    # no double-use of one mesh axis; rule PRIORITY wins (heads > mlp)
+    spec = shd.resolve(("mlp", "heads"), rules, sizes, shape=(256, 32))
+    assert spec == jax.sharding.PartitionSpec(None, "model")
+    # seq-TP: qk_seq takes model only when heads can't
+    spec = shd.resolve(("batch", "qk_seq", "heads", "head_dim"), rules, sizes,
+                       shape=(32, 4096, 24, 128))
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+    spec = shd.resolve(("batch", "qk_seq", "heads", "head_dim"), rules, sizes,
+                       shape=(32, 4096, 48, 128))
+    assert spec == jax.sharding.PartitionSpec("data", None, "model")
