@@ -1,9 +1,20 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV and writes the same rows to a machine-readable BENCH_sort.json so
+# successive PRs accumulate a perf trajectory.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+# Make `python benchmarks/run.py` work from anywhere: the repo root (and
+# src/, for checkouts without `pip install -e .`) must be importable.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def main() -> None:
@@ -11,7 +22,15 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes (CI/container friendly)")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument("--json", default=None,
+                    help="output path for machine-readable rows; default "
+                         "BENCH_sort.json, but a --only run does NOT "
+                         "write unless --json is passed explicitly (the "
+                         "file is the cross-PR perf record and a partial "
+                         "row set would clobber it); '' disables")
     args = ap.parse_args()
+    if args.json is None:
+        args.json = "" if args.only else "BENCH_sort.json"
 
     from benchmarks import (
         distribution_robustness,
@@ -42,18 +61,40 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    all_rows: list[dict] = []
     for name, fn in suites.items():
         if only and name not in only:
             continue
         t0 = time.time()
         try:
             for row in fn():
+                all_rows.append(dict(
+                    name=row["name"],
+                    us_per_call=round(float(row["us_per_call"]), 1),
+                    derived=str(row["derived"]),
+                ))
                 d = str(row["derived"]).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']:.1f},{d}", flush=True)
         except Exception as e:  # pragma: no cover
             failures += 1
+            all_rows.append(dict(name=name, us_per_call=None,
+                                 derived=f"ERROR {type(e).__name__}: {e}"))
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if args.json:
+        payload = dict(
+            schema="bench_sort/v1",
+            quick=quick,
+            only=sorted(only) if only else None,
+            timestamp=time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            rows=all_rows,
+        )
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(all_rows)} rows to {args.json}", file=sys.stderr)
+
     if failures:
         raise SystemExit(1)
 

@@ -1,8 +1,16 @@
-"""Fig. 5 analogue: per-step timing of Algorithm 1 (C3).
+"""Fig. 5 analogue: per-step timing of Algorithm 1 (C3), plus the
+baseline-vs-fused deltas of the row-blocked pipeline (DESIGN.md §3-§4).
 
 The paper observes: local sort (step 2) + sublist sort (step 9)
 dominate; deterministic-sampling overhead (steps 3-7) is small; the
 relocation (step 8) is cheap because it is one coalesced pass.
+
+On top of the per-step rows this emits A/B rows for the two hot spots
+this port optimizes:
+  * step 2 local sort — per-tile (block_rows=1) vs row-blocked Pallas
+    kernel, both interpret-mode (the container has no TPU);
+  * steps 8/9 relocation + compaction — legacy scatter formulation vs
+    the scatter-free gather formulation, on the xla path.
 """
 
 from __future__ import annotations
@@ -15,46 +23,55 @@ import numpy as np
 
 from benchmarks.common import timeit
 from repro.core import bucket_sort as bs
-from repro.core.sort_config import SortConfig, round_up
+from repro.core.sort_config import SortConfig, next_pow2, round_up
 from repro.kernels import ops
 
 CFG = SortConfig(tile=4096, s=64, direct_max=8192, impl="xla")
 
 
-def run(n=1048576, repeats=3):
+def run(n=1048576, repeats=3, pallas_compare=True):
     rng = np.random.default_rng(2)
     x = rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32)
     u = ops.to_sortable(jnp.asarray(x))
     t, sper = CFG.tile, CFG.s
     lp = round_up(n, t)
     m = lp // t
-    s_round = min(max(2 * lp // t and 64, 2), sper)
+    s_round = min(max(next_pow2(-(-2 * lp // t)), 2), sper)
+    cap = round_up(lp // s_round + lp // sper, 128)
+    r = 1
 
+    # --- Per-step rows (Fig. 5), on the default fused path. -------------
     @jax.jit
     def local_sort(u):
         v = jnp.arange(lp, dtype=jnp.int32)
-        return ops.sort_tiles(u.reshape(m, t), v.reshape(m, t), impl="xla")
+        return ops.sort_tiles_sample(
+            u.reshape(m, t), v.reshape(m, t), num_samples=sper, impl="xla"
+        )
 
-    tk, tv = jax.block_until_ready(local_sort(u))
+    tk, tv, sampk, sampv = jax.block_until_ready(local_sort(u))
 
     @jax.jit
-    def sample_and_sort(tk, tv):
-        idx = (jnp.arange(1, sper + 1, dtype=jnp.int32) * (t // sper)) - 1
-        sk = tk[:, idx].reshape(1, m * sper)
-        sv = tv[:, idx].reshape(1, m * sper)
-        ssk, ssv, _ = bs._sort_rows(sk, sv, CFG, 2 * lp, None)
+    def sample_sort(sampk, sampv):
+        ssk, ssv, _ = bs._sort_rows(
+            sampk.reshape(1, m * sper), sampv.reshape(1, m * sper),
+            CFG, 2 * lp, None,
+        )
         return ssk, ssv
 
-    ssk, ssv = jax.block_until_ready(sample_and_sort(tk, tv))
+    ssk, ssv = jax.block_until_ready(sample_sort(sampk, sampv))
 
-    @jax.jit
-    def ranks_fn(tk, tv, ssk, ssv):
+    def splitters(ssk, ssv):
         sp_idx = (jnp.arange(1, s_round, dtype=jnp.int32) * (m * sper)) // s_round
         spk = jnp.repeat(ssk[:, sp_idx], m, axis=0)
         spv = jnp.repeat(ssv[:, sp_idx], m, axis=0)
-        return ops.splitter_ranks(tk, tv, spk, spv, impl="xla")
+        return spk, spv
 
-    ranks = jax.block_until_ready(ranks_fn(tk, tv, ssk, ssv))
+    @jax.jit
+    def ranks_fn(tk, tv, ssk, ssv):
+        spk, spv = splitters(ssk, ssv)
+        return ops.splitter_partition(tk, tv, spk, spv, impl="xla")
+
+    ranks, counts2 = jax.block_until_ready(ranks_fn(tk, tv, ssk, ssv))
 
     @jax.jit
     def full(u):
@@ -62,15 +79,15 @@ def run(n=1048576, repeats=3):
 
     rows = []
     t_local = timeit(local_sort, u, repeats=repeats)
-    t_samp = timeit(sample_and_sort, tk, tv, repeats=repeats)
+    t_samp = timeit(sample_sort, sampk, sampv, repeats=repeats)
     t_rank = timeit(ranks_fn, tk, tv, ssk, ssv, repeats=repeats)
     t_full = timeit(full, u, repeats=repeats)
     rest = max(t_full - t_local - t_samp - t_rank, 0.0)
     for name, tt in [
-        ("step2_local_sort", t_local),
-        ("steps3-5_sampling", t_samp),
-        ("step6_sample_indexing", t_rank),
-        ("steps7-9_relocate_and_bucket_sort", rest),
+        ("step2-3_local_sort_fused_sampling", t_local),
+        ("step4-5_sample_sort", t_samp),
+        ("step6-7_splitter_partition", t_rank),
+        ("steps8-9_relocate_and_bucket_sort", rest),
         ("total", t_full),
     ]:
         frac = tt / t_full if t_full else 0
@@ -80,4 +97,93 @@ def run(n=1048576, repeats=3):
     rows.append(dict(
         name="step_breakdown/sampling_overhead_fraction", us_per_call=0.0,
         derived=f"{100*overhead:.1f}% (paper C3: small)"))
+
+    # --- A/B: scatter vs gather relocation + compaction (steps 8/9). ----
+    starts = jnp.concatenate([jnp.zeros((r * m, 1), jnp.int32), ranks], axis=1)
+    counts = counts2.reshape(r, m, s_round)
+    tile_off = jnp.cumsum(counts, axis=1) - counts
+    totals = counts.sum(axis=1)
+
+    @jax.jit
+    def reloc_scatter(tk, tv, ranks, starts, tile_off):
+        return bs._relocate_scatter(
+            tk, tv, ranks, starts, tile_off, r, m, s_round, t, cap, 2 * lp)
+
+    @jax.jit
+    def reloc_gather(tk, tv, starts, tile_off, totals):
+        return bs._relocate_gather(
+            tk, tv, starts, tile_off, totals, r, m, s_round, t, cap, 2 * lp)
+
+    bk, bv = jax.block_until_ready(reloc_gather(tk, tv, starts, tile_off, totals))
+
+    @jax.jit
+    def compact_scatter(bk, bv, totals):
+        return bs._compact_scatter(bk, bv, totals, r, s_round, cap, lp)
+
+    @jax.jit
+    def compact_gather(bk, bv, totals):
+        return bs._compact_gather(bk, bv, totals, r, s_round, cap, lp)
+
+    t_rel_sc = timeit(reloc_scatter, tk, tv, ranks, starts, tile_off,
+                      repeats=repeats)
+    t_rel_ga = timeit(reloc_gather, tk, tv, starts, tile_off, totals,
+                      repeats=repeats)
+    # NB: compaction here runs on the *uncompacted* bucket array (the real
+    # pipeline compacts after the recursive sort) — identical shapes/cost.
+    t_cmp_sc = timeit(compact_scatter, bk, bv, totals, repeats=repeats)
+    t_cmp_ga = timeit(compact_gather, bk, bv, totals, repeats=repeats)
+    rows.append(dict(
+        name="step_breakdown/step8_relocation_scatter",
+        us_per_call=t_rel_sc * 1e6, derived="legacy 1-D scatter (xla)"))
+    rows.append(dict(
+        name="step_breakdown/step8_relocation_gather",
+        us_per_call=t_rel_ga * 1e6,
+        derived=f"scatter-free; {t_rel_sc / max(t_rel_ga, 1e-12):.2f}x vs scatter"))
+    rows.append(dict(
+        name="step_breakdown/step9_compaction_scatter",
+        us_per_call=t_cmp_sc * 1e6, derived="legacy 1-D scatter (xla)"))
+    rows.append(dict(
+        name="step_breakdown/step9_compaction_gather",
+        us_per_call=t_cmp_ga * 1e6,
+        derived=f"scatter-free; {t_cmp_sc / max(t_cmp_ga, 1e-12):.2f}x vs scatter"))
+
+    # --- A/B: per-tile vs row-blocked Pallas local sort (interpret). ----
+    t_pal_tile = t_pal_blk = None
+    if pallas_compare:
+        v = jnp.arange(lp, dtype=jnp.int32).reshape(m, t)
+        uk = u.reshape(m, t) if lp == n else jnp.pad(u, (0, lp - n)).reshape(m, t)
+
+        @functools.partial(jax.jit, static_argnames=("br",))
+        def pal_sort(uk, v, br):
+            return ops.sort_tiles(uk, v, impl="pallas", interpret=True,
+                                  block_rows=br)
+
+        t_pal_tile = timeit(lambda a, b: pal_sort(a, b, 1), uk, v,
+                            repeats=repeats)
+        t_pal_blk = timeit(lambda a, b: pal_sort(a, b, None), uk, v,
+                           repeats=repeats)
+        rows.append(dict(
+            name="step_breakdown/step2_local_sort_pallas_per_tile",
+            us_per_call=t_pal_tile * 1e6,
+            derived=f"block_rows=1, grid={m} (interpret)"))
+        rows.append(dict(
+            name="step_breakdown/step2_local_sort_pallas_blocked",
+            us_per_call=t_pal_blk * 1e6,
+            derived=f"auto block_rows, "
+                    f"{t_pal_tile / max(t_pal_blk, 1e-12):.2f}x vs per-tile"))
+
+    # --- Acceptance row: local sort + relocation, baseline vs fused. ----
+    base_ls = t_pal_tile if t_pal_tile is not None else t_local
+    new_ls = t_pal_blk if t_pal_blk is not None else t_local
+    base = base_ls + t_rel_sc + t_cmp_sc
+    new = new_ls + t_rel_ga + t_cmp_ga
+    rows.append(dict(
+        name="step_breakdown/local_sort_plus_relocation_baseline",
+        us_per_call=base * 1e6,
+        derived="per-tile sort + scatter relocation/compaction"))
+    rows.append(dict(
+        name="step_breakdown/local_sort_plus_relocation_fused",
+        us_per_call=new * 1e6,
+        derived=f"blocked sort + gather relocation/compaction; "
+                f"{base / max(new, 1e-12):.2f}x speedup (n={n})"))
     return rows

@@ -8,14 +8,13 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import SortConfig, make_sharded_sort
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = SortConfig(tile=1024, s=32, direct_max=2048, impl="xla")
 n = 1 << 17
 

@@ -1,0 +1,23 @@
+"""Version shims for jax APIs that moved between 0.4.x and 0.5+.
+
+Keep every cross-version conditional here so callers (and tests) depend
+on one location rather than re-deriving the probe.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):  # jax >= 0.5
+    shard_map = jax.shard_map
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def mesh_axis_type_kwargs(naxes: int) -> dict:
+    """jax >= 0.5 wants explicit AxisType.Auto in jax.make_mesh; older
+    jax has no AxisType (everything is Auto implicitly).  Returns kwargs
+    valid for the running version."""
+    if hasattr(jax.sharding, "AxisType"):
+        return dict(axis_types=(jax.sharding.AxisType.Auto,) * naxes)
+    return {}

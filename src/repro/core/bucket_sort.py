@@ -3,21 +3,32 @@
 Single-device deterministic sample sort.  The paper's nine steps map to:
 
   step 1  split into tiles            -> reshape (rows, L) -> (rows*m, T)
-  step 2  local sort per SM           -> Pallas bitonic tile sort (VMEM)
-  step 3  s equidistant local samples -> strided slice fused with step 2 output
+  step 2  local sort per SM           -> row-blocked Pallas bitonic sort
+                                         (block_rows tiles per grid program)
+  step 3  s equidistant local samples -> fused epilogue output of step 2
   step 4  sort all samples            -> recursive call on the sample array
   step 5  s equidistant global samples-> strided slice of sorted samples
-  step 6  sample indexing             -> Pallas splitter-rank kernel
+  step 6  sample indexing             -> fused Pallas splitter-partition
+                                         kernel (ranks + bucket counts)
   step 7  column-major prefix sum     -> cumsums over (rows, m, s) counts
-  step 8  data relocation             -> one scatter into (rows*s, B) buckets
+  step 8  data relocation             -> gather: source index per bucket
+                                         slot, then one `take`
   step 9  sublist sort                -> recursion on bucket rows, then a
-                                         compaction scatter back to dense rows
+                                         gather-based compaction back to
+                                         dense rows
 
 TPU adaptation (see DESIGN.md §2): buckets live in a DENSE (rows*s, B)
 array with static capacity B = L/s_round + L/s — the deterministic
 regular-sampling bound makes this capacity *guaranteed*, which is what
 lets the whole sort be expressed with static shapes (a hard requirement
 under XLA).  Randomized sample sort admits no such static capacity.
+
+Relocation/compaction are SCATTER-FREE on the default path (DESIGN.md
+§4): both passes compute, for every destination slot, the source index
+it must read (via a binary search over the chunk-offset tables) and
+gather with `take`.  XLA serializes large 1-D scatters; gathers it
+vectorizes.  ``cfg.relocation="scatter"`` keeps the legacy
+destination-scatter formulation as a reference path.
 
 Correctness invariants (tested, incl. hypothesis properties):
   * elements are (key, payload) pairs, payload = original index =>
@@ -65,66 +76,72 @@ def _direct_sort(keys, vals, cfg, pad_base):
     r, length = keys.shape
     lp = next_pow2(length)
     keys, vals, pad_base = _pad_cols(keys, vals, lp, pad_base)
-    sk, sv = ops.sort_tiles(keys, vals, impl=cfg.impl, interpret=cfg.interpret)
+    sk, sv = ops.sort_tiles(
+        keys, vals, impl=cfg.impl, interpret=cfg.interpret,
+        block_rows=cfg.block_rows,
+    )
     return sk[:, :length], sv[:, :length], pad_base
 
 
-def _sort_rows(keys, vals, cfg: SortConfig, pad_base: int, stats: list | None):
-    """Sort each row of (rows, L) canonical uint32 keys / int32 payloads.
+def _chunk_search(offsets, positions):
+    """For each row: index of the chunk containing each position.
 
-    Returns (sorted_keys, sorted_vals, pad_base) with dense sorted rows of
-    the input shape.  Static recursion: every shape is trace-time known;
-    ``pad_base`` is a trace-time python int.
+    offsets: (Q, C) non-decreasing exclusive chunk starts (offsets[:, 0]
+    == 0); positions: (Q, P) query positions.  Returns (Q, P) int32 j
+    with offsets[q, j] <= positions[q, p] < offsets[q, j+1] — i.e. the
+    LAST chunk starting at or before the position, which skips empty
+    chunks (ties in ``offsets``) correctly.  Pure binary search: lowers
+    to gathers, never a scatter.
     """
-    r, length = keys.shape
-    if length <= cfg.direct_max:
-        return _direct_sort(keys, vals, cfg, pad_base)
+    find = jax.vmap(lambda o, p: jnp.searchsorted(o, p, side="right"))
+    return find(offsets, positions).astype(jnp.int32) - 1
 
-    t, sper = cfg.tile, cfg.s
-    lp = round_up(length, t)
-    keys, vals, pad_base = _pad_cols(keys, vals, lp, pad_base)
-    m = lp // t
 
-    # Steps 1-2: local tile sort.
-    tk = keys.reshape(r * m, t)
-    tv = vals.reshape(r * m, t)
-    tk, tv = ops.sort_tiles(tk, tv, impl=cfg.impl, interpret=cfg.interpret)
+def _relocate_gather(tk, tv, starts, tile_off, totals, r, m, s_round, t, cap,
+                     pad_base):
+    """Step 8, scatter-free (DESIGN.md §4): for every slot of the dense
+    (r*s_round, cap) bucket array compute the SOURCE element it receives,
+    then gather.
 
-    # Step 3: s equidistant samples per tile (positions (j+1)*T/s - 1).
-    samp_idx = (jnp.arange(1, sper + 1, dtype=jnp.int32) * (t // sper)) - 1
-    samples_k = tk[:, samp_idx].reshape(r, m * sper)
-    samples_v = tv[:, samp_idx].reshape(r, m * sper)
+    Bucket row q = r'*s_round + j receives, tile by tile, the elements
+    of tile i = 0..m-1 of data row r' that fall in key range j; tile i's
+    chunk lands at offset tile_off[r', i, j] and is read from the sorted
+    tile starting at starts[r'*m + i, j].  Slot p of bucket row q
+    therefore reads from the tile whose chunk covers p (binary search
+    over the m chunk offsets), at chunk-relative position p - chunk
+    offset.  Slots past the true fill (p >= totals) become fresh unique
+    pads.
+    """
+    # Per-bucket-row views: (r*s_round, m) chunk offsets / tile starts.
+    offs = tile_off.transpose(0, 2, 1).reshape(r * s_round, m)
+    st = starts.reshape(r, m, s_round).transpose(0, 2, 1).reshape(r * s_round, m)
+    p = jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 1)
+    src_tile = _chunk_search(offs, p)  # (r*s_round, cap) tile index
+    src_start = jnp.take_along_axis(st, src_tile, axis=1)
+    src_off = jnp.take_along_axis(offs, src_tile, axis=1)
+    row_base = (
+        jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 0) // s_round
+    ) * m
+    src = (row_base + src_tile) * t + src_start + (p - src_off)
+    valid = p < totals.reshape(r * s_round, 1)
+    src = jnp.where(valid, src, 0)
+    gk = jnp.take(tk.reshape(-1), src.reshape(-1)).reshape(src.shape)
+    gv = jnp.take(tv.reshape(-1), src.reshape(-1)).reshape(src.shape)
+    pad_v = (
+        jnp.int32(pad_base)
+        + jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 0) * cap
+        + jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 1)
+    )
+    bk = jnp.where(valid, gk, _MAXU)
+    bv = jnp.where(valid, gv, pad_v)
+    return bk, bv
 
-    # Step 4: sort all samples (recursive; sample array is L*s/T << L).
-    ssk, ssv, pad_base = _sort_rows(samples_k, samples_v, cfg, pad_base, None)
 
-    # Step 5: s_round - 1 equidistant global splitters.
-    s_round = min(max(next_pow2(-(-2 * lp // t)), 2), sper)
-    total_samples = m * sper
-    sp_idx = (jnp.arange(1, s_round, dtype=jnp.int32) * total_samples) // s_round
-    spk = ssk[:, sp_idx]  # (r, s_round-1)
-    spv = ssv[:, sp_idx]
-
-    # Step 6: rank of each splitter in each tile (per-tile splitter rows).
-    spk_t = jnp.repeat(spk, m, axis=0)  # (r*m, s_round-1)
-    spv_t = jnp.repeat(spv, m, axis=0)
-    ranks = ops.splitter_ranks(
-        tk, tv, spk_t, spv_t, impl=cfg.impl, interpret=cfg.interpret
-    )  # (r*m, s_round-1), values in [0, T]
-
-    # Bucket capacity: regular-sampling bound (see module docstring).
-    cap = round_up(lp // s_round + lp // sper, 128)
-
-    # Step 7: prefix sums.  counts[i, j] = size of bucket j in tile i.
-    zeros = jnp.zeros((r * m, 1), jnp.int32)
-    starts = jnp.concatenate([zeros, ranks], axis=1)  # (r*m, s_round)
-    ends = jnp.concatenate([ranks, jnp.full((r * m, 1), t, jnp.int32)], axis=1)
-    counts = (ends - starts).reshape(r, m, s_round)
-    # offset of tile i's chunk within bucket j of its row (exclusive cumsum):
-    tile_off = jnp.cumsum(counts, axis=1) - counts  # (r, m, s_round)
-    totals = counts.sum(axis=1)  # (r, s_round) true bucket fills
-
-    # Step 8: relocation — one scatter into the dense bucket array.
+def _relocate_scatter(tk, tv, ranks, starts, tile_off, r, m, s_round, t, cap,
+                      pad_base):
+    """Step 8, legacy destination-scatter reference path: compute each
+    ELEMENT's destination slot and scatter.  XLA serializes the two
+    full-size 1-D scatters; kept only for cfg.relocation="scatter"."""
     pos = jax.lax.broadcasted_iota(jnp.int32, (r * m, t), 1)
     ind = jnp.zeros((r * m, t + 1), jnp.int32)
     ind = ind.at[
@@ -146,30 +163,27 @@ def _sort_rows(keys, vals, cfg: SortConfig, pad_base: int, stats: list | None):
     bv = jnp.int32(pad_base) + jax.lax.broadcasted_iota(jnp.int32, (nbuf,), 0)
     bk = bk.at[dest.reshape(-1)].set(tk.reshape(-1), mode="drop")
     bv = bv.at[dest.reshape(-1)].set(tv.reshape(-1), mode="drop")
-    pad_base += nbuf
+    return bk.reshape(r * s_round, cap), bv.reshape(r * s_round, cap)
 
-    if stats is not None:
-        stats.append(
-            dict(
-                level_len=lp,
-                s_round=s_round,
-                capacity=cap,
-                totals=totals,
-                max_within=jnp.max(within),
-            )
-        )
 
-    # Step 9: sort every bucket row (recursion), then compact to dense rows.
-    ck, cv, pad_base = _sort_rows(
-        bk.reshape(r * s_round, cap),
-        bv.reshape(r * s_round, cap),
-        cfg,
-        pad_base,
-        stats,
-    )
+def _compact_gather(ck, cv, totals, r, s_round, cap, lp):
+    """Step 9 compaction, scatter-free: dense column c of data row r'
+    reads from bucket j covering c (binary search over the s_round
+    bucket offsets) at position c - bucket_off.  Bucket fills sum to lp
+    per row, so every dense slot has exactly one source — no pads."""
+    bucket_off = jnp.cumsum(totals, axis=1) - totals  # (r, s_round) excl.
+    c = jax.lax.broadcasted_iota(jnp.int32, (r, lp), 1)
+    srcj = _chunk_search(bucket_off, c)  # (r, lp) bucket index
+    within = c - jnp.take_along_axis(bucket_off, srcj, axis=1)
+    row = jax.lax.broadcasted_iota(jnp.int32, (r, lp), 0)
+    src = (row * s_round + srcj) * cap + within
+    ok = jnp.take(ck.reshape(-1), src.reshape(-1)).reshape(r, lp)
+    ov = jnp.take(cv.reshape(-1), src.reshape(-1)).reshape(r, lp)
+    return ok, ov
 
-    # Compaction: first totals[q, j] entries of bucket row (q, j) are exactly
-    # the elements this level scattered there (fresh pads sort after them).
+
+def _compact_scatter(ck, cv, totals, r, s_round, cap, lp):
+    """Step 9 compaction, legacy scatter reference path."""
     bucket_off = jnp.cumsum(totals, axis=1) - totals  # (r, s_round) excl.
     p = jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 1)
     valid = p < totals.reshape(r * s_round, 1)
@@ -180,7 +194,116 @@ def _sort_rows(keys, vals, cfg: SortConfig, pad_base: int, stats: list | None):
     ov = jnp.full((r * lp,), jnp.int32(_INT_MAX))
     ok = ok.at[dflat.reshape(-1)].set(ck.reshape(-1), mode="drop")
     ov = ov.at[dflat.reshape(-1)].set(cv.reshape(-1), mode="drop")
-    return ok.reshape(r, lp)[:, :length], ov.reshape(r, lp)[:, :length], pad_base
+    return ok.reshape(r, lp), ov.reshape(r, lp)
+
+
+def _sort_rows(keys, vals, cfg: SortConfig, pad_base: int, stats: list | None):
+    """Sort each row of (rows, L) canonical uint32 keys / int32 payloads.
+
+    Returns (sorted_keys, sorted_vals, pad_base) with dense sorted rows of
+    the input shape.  Static recursion: every shape is trace-time known;
+    ``pad_base`` is a trace-time python int.
+    """
+    r, length = keys.shape
+    if length <= cfg.direct_max:
+        return _direct_sort(keys, vals, cfg, pad_base)
+
+    t, sper = cfg.tile, cfg.s
+    lp = round_up(length, t)
+    keys, vals, pad_base = _pad_cols(keys, vals, lp, pad_base)
+    m = lp // t
+
+    # Steps 1-3: row-blocked local tile sort, sample extraction fused in.
+    tk = keys.reshape(r * m, t)
+    tv = vals.reshape(r * m, t)
+    if cfg.fuse_sampling:
+        tk, tv, samp_k, samp_v = ops.sort_tiles_sample(
+            tk, tv, num_samples=sper, impl=cfg.impl,
+            interpret=cfg.interpret, block_rows=cfg.block_rows,
+        )
+        samples_k = samp_k.reshape(r, m * sper)
+        samples_v = samp_v.reshape(r, m * sper)
+    else:
+        tk, tv = ops.sort_tiles(
+            tk, tv, impl=cfg.impl, interpret=cfg.interpret,
+            block_rows=cfg.block_rows,
+        )
+        samp_idx = (jnp.arange(1, sper + 1, dtype=jnp.int32) * (t // sper)) - 1
+        samples_k = tk[:, samp_idx].reshape(r, m * sper)
+        samples_v = tv[:, samp_idx].reshape(r, m * sper)
+
+    # Step 4: sort all samples (recursive; sample array is L*s/T << L).
+    ssk, ssv, pad_base = _sort_rows(samples_k, samples_v, cfg, pad_base, None)
+
+    # Step 5: s_round - 1 equidistant global splitters.
+    s_round = min(max(next_pow2(-(-2 * lp // t)), 2), sper)
+    total_samples = m * sper
+    sp_idx = (jnp.arange(1, s_round, dtype=jnp.int32) * total_samples) // s_round
+    spk = ssk[:, sp_idx]  # (r, s_round-1)
+    spv = ssv[:, sp_idx]
+
+    # Steps 6-7: splitter ranks + per-tile bucket counts (fused epilogue),
+    # then the column-major prefix sums over (rows, m, s_round).
+    spk_t = jnp.repeat(spk, m, axis=0)  # (r*m, s_round-1)
+    spv_t = jnp.repeat(spv, m, axis=0)
+    if cfg.fuse_ranking:
+        ranks, counts2 = ops.splitter_partition(
+            tk, tv, spk_t, spv_t, impl=cfg.impl, interpret=cfg.interpret,
+        )  # ranks (r*m, s_round-1); counts2 (r*m, s_round)
+    else:
+        ranks = ops.splitter_ranks(
+            tk, tv, spk_t, spv_t, impl=cfg.impl, interpret=cfg.interpret
+        )  # (r*m, s_round-1), values in [0, T]
+        ends = jnp.concatenate(
+            [ranks, jnp.full((r * m, 1), t, jnp.int32)], axis=1
+        )
+        counts2 = ends - jnp.concatenate(
+            [jnp.zeros((r * m, 1), jnp.int32), ranks], axis=1
+        )
+    starts = jnp.concatenate(
+        [jnp.zeros((r * m, 1), jnp.int32), ranks], axis=1
+    )  # (r*m, s_round): start of bucket j within tile i
+    counts = counts2.reshape(r, m, s_round)
+    # offset of tile i's chunk within bucket j of its row (exclusive cumsum):
+    tile_off = jnp.cumsum(counts, axis=1) - counts  # (r, m, s_round)
+    totals = counts.sum(axis=1)  # (r, s_round) true bucket fills
+
+    # Bucket capacity: regular-sampling bound (see DESIGN.md §2).
+    cap = round_up(lp // s_round + lp // sper, 128)
+
+    # Step 8: relocation into the dense (r*s_round, cap) bucket array.
+    if cfg.relocation == "gather":
+        bk, bv = _relocate_gather(
+            tk, tv, starts, tile_off, totals, r, m, s_round, t, cap, pad_base
+        )
+    else:
+        bk, bv = _relocate_scatter(
+            tk, tv, ranks, starts, tile_off, r, m, s_round, t, cap, pad_base
+        )
+    pad_base += r * s_round * cap
+
+    if stats is not None:
+        stats.append(
+            dict(
+                level_len=lp,
+                s_round=s_round,
+                capacity=cap,
+                totals=totals,
+                # every bucket's elements sit at 0..fill-1 of their row
+                max_within=jnp.max(totals) - 1,
+            )
+        )
+
+    # Step 9: sort every bucket row (recursion), then compact to dense rows.
+    ck, cv, pad_base = _sort_rows(bk, bv, cfg, pad_base, stats)
+
+    # Compaction: first totals[q, j] entries of bucket row (q, j) are exactly
+    # the elements this level relocated there (fresh pads sort after them).
+    if cfg.relocation == "gather":
+        ok, ov = _compact_gather(ck, cv, totals, r, s_round, cap, lp)
+    else:
+        ok, ov = _compact_scatter(ck, cv, totals, r, s_round, cap, lp)
+    return ok[:, :length], ov[:, :length], pad_base
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "with_stats"))

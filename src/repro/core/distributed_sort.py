@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.bucket_sort import _sort_rows
 from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, round_up
 from repro.kernels import ops
@@ -230,7 +231,7 @@ def make_sharded_sort(
 
     @jax.jit
     def run(keys):
-        fk, fv, counts, mw = jax.shard_map(
+        fk, fv, counts, mw = shard_map(
             body,
             mesh=mesh,
             in_specs=(pspec,),

@@ -18,7 +18,7 @@ def round_up(x: int, mult: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class SortConfig:
-    """Knobs of Algorithm 1, adapted to TPU.
+    """Knobs of Algorithm 1, adapted to TPU (layout: DESIGN.md §3-§4).
 
     tile: VMEM tile size T (paper: n/m = 2K items per SM shared memory).
         Power of two; multiple of 128 for lane alignment on real TPU.
@@ -27,6 +27,23 @@ class SortConfig:
         single tile instead of going through a bucket round.
     impl: "pallas" (kernels) | "xla" (pure-jnp reference path) | None=auto.
     interpret: Pallas interpret mode (None = auto: True off-TPU).
+    block_rows: tiles sorted per grid program in the row-blocked bitonic
+        kernel.  None = auto-pick the largest power-of-two divisor of the
+        tile count that fills the VMEM budget; an explicit value must be
+        a power of two and acts as an UPPER BOUND — recursion levels
+        whose tile count it does not divide clamp down to the largest
+        power-of-two divisor (bitonic.effective_block_rows).
+    fuse_sampling: emit Step 3's equidistant samples from the tile-sort
+        kernel epilogue instead of a separate gather over the sorted
+        tiles (one fewer HBM read).
+    fuse_ranking: use the fused Step 6+7 splitter-partition epilogue
+        (ranks + bucket counts in one read) instead of the standalone
+        ranks kernel.
+    relocation: "gather" (default) computes the SOURCE index of every
+        destination slot and relocates/compacts with `take` — no
+        scatters anywhere on the hot path (DESIGN.md §4).  "scatter" is
+        the legacy destination-scatter formulation, kept as a reference
+        for tests and benchmarks.
     """
 
     tile: int = 4096
@@ -34,6 +51,10 @@ class SortConfig:
     direct_max: int = 8192
     impl: str | None = None
     interpret: bool | None = None
+    block_rows: int | None = None
+    fuse_sampling: bool = True
+    fuse_ranking: bool = True
+    relocation: str = "gather"
 
     def __post_init__(self):
         assert self.tile >= 2 and self.tile & (self.tile - 1) == 0, self.tile
@@ -41,6 +62,12 @@ class SortConfig:
         assert self.s <= self.tile and self.tile % self.s == 0
         assert self.direct_max >= self.tile
         assert self.impl in (None, "pallas", "xla")
+        if self.block_rows is not None:
+            assert (
+                self.block_rows >= 1
+                and self.block_rows & (self.block_rows - 1) == 0
+            ), self.block_rows
+        assert self.relocation in ("gather", "scatter"), self.relocation
 
 
 # Paper default: s = 64 (Fig. 3 sweep), 2K-item tiles on 16KB shared memory.

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: bitonic (key, value) sort of VMEM-resident tiles.
+"""Pallas TPU kernel: row-blocked bitonic (key, value) sort of VMEM tiles.
 
 This is the TPU adaptation of Steps 2/4/9 of GPU BUCKET SORT (Dehne &
 Zaboli 2010).  The paper sorts 2K-item sublists per SM in shared memory
@@ -7,9 +7,16 @@ same argument holds on the TPU VPU: every compare-exchange pass is a
 reshape + vectorized min/max/select with *no* data-dependent control
 flow, so the whole network lowers to straight-line vector code.
 
-Layout notes (target = TPU v5e):
-  * One grid program sorts one tile of ``tile`` keys+values held in VMEM.
-  * ``tile`` must be a power of two and a multiple of 128 (lane width)
+Layout notes (target = TPU v5e; see DESIGN.md §3):
+  * One grid program sorts a ``(block_rows, T)`` BLOCK of tiles held in
+    VMEM, running the compare-exchange network along the lane axis of
+    all ``block_rows`` rows at once.  With ``block_rows >= 8`` every
+    vector op is a dense (8-sublane x 128-lane) tile, instead of the
+    1/8-occupancy (1, T) ops the per-tile formulation issues.
+  * ``block_rows`` is auto-picked by :func:`auto_block_rows` to fill a
+    VMEM budget; the grid axis is declared ``parallel`` (programs are
+    independent) so Mosaic may pipeline/parallelize blocks freely.
+  * ``T`` must be a power of two and a multiple of 128 (lane width)
     so the (nb, 2, d) reshapes stay lane-aligned for d >= 128.  Strides
     d < 128 become intra-lane shuffles; Mosaic handles them, and a
     production-tuned variant would switch to sublane rotates there —
@@ -18,6 +25,11 @@ Layout notes (target = TPU v5e):
     original element index as the value, which (a) makes every compared
     pair unique so the regular-sampling bucket bound ≤ 2n/s holds for
     any duplicate distribution, and (b) makes the sort STABLE.
+  * Step 3 of the algorithm (equidistant sample extraction) is FUSED
+    into the kernel as an optional epilogue output: the s per-tile
+    samples are the last element of each T/s chunk of the sorted row,
+    a pure reshape + slice while the block is still VMEM-resident.
+    This removes one full HBM read of the sorted tiles (DESIGN.md §3).
 
 Keys are canonical uint32 (see ``ops.to_sortable``); values are int32.
 """
@@ -29,6 +41,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# VMEM budget for one grid program's block: in + out, keys + values
+# (4 buffers of block_rows * T * 4 bytes).  8 MiB of the ~16 MiB/core
+# leaves headroom for the network's double-buffered temporaries.
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
 
 def _compare_exchange(keys, vals, d: int, size: int):
@@ -65,7 +83,9 @@ def bitonic_network(keys, vals):
     """Full bitonic sorting network on 1-D (keys, vals); T = power of two.
 
     Unrolled at trace time: log2(T)*(log2(T)+1)/2 vectorized passes.
-    Shared by the Pallas kernel body and the pure-jnp reference path.
+    Kept as the 1-D reference formulation (and the per-tile baseline in
+    ``benchmarks/step_breakdown.py``); the kernel path uses the row-
+    blocked :func:`bitonic_network_rows`.
     """
     t = keys.shape[0]
     assert t & (t - 1) == 0, f"tile size {t} must be a power of two"
@@ -79,42 +99,8 @@ def bitonic_network(keys, vals):
     return keys, vals
 
 
-def _bitonic_kernel(k_ref, v_ref, ko_ref, vo_ref):
-    keys = k_ref[0, :]
-    vals = v_ref[0, :]
-    keys, vals = bitonic_network(keys, vals)
-    ko_ref[0, :] = keys
-    vo_ref[0, :] = vals
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def sort_tiles_kv(keys: jax.Array, vals: jax.Array, *, interpret: bool = True):
-    """Sort each row of (m, T) keys/vals independently, lexicographically.
-
-    keys: uint32 canonical sort keys, shape (m, T), T a power of two.
-    vals: int32 payload (original indices for stability), same shape.
-    Returns (sorted_keys, sorted_vals), each row ascending.
-    """
-    m, t = keys.shape
-    assert vals.shape == (m, t)
-    assert keys.dtype == jnp.uint32 and vals.dtype == jnp.int32
-    grid = (m,)
-    blk_in = pl.BlockSpec((1, t), lambda i: (i, 0))
-    return pl.pallas_call(
-        _bitonic_kernel,
-        grid=grid,
-        in_specs=[blk_in, blk_in],
-        out_specs=[blk_in, blk_in],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, t), jnp.uint32),
-            jax.ShapeDtypeStruct((m, t), jnp.int32),
-        ],
-        interpret=interpret,
-    )(keys, vals)
-
-
-# --- Row-wise bitonic along the last axis (used by the top-k kernel and the
-# --- pure-jnp tile path, where many independent rows are sorted at once).
+# --- Row-wise bitonic along the last axis: shared by the blocked tile-sort
+# --- kernel, the top-k kernel, and the pure-jnp reference path.
 
 
 def _row_compare_exchange(keys, vals, d: int, size: int):
@@ -153,3 +139,128 @@ def bitonic_network_rows(keys, vals):
             d //= 2
         size *= 2
     return keys, vals
+
+
+def largest_pow2_divisor(m: int, limit: int) -> int:
+    """Largest power of two that divides ``m`` and is <= ``limit``.
+
+    The single clamp rule every row-blocked kernel uses to turn a
+    block-count bound into a grid-compatible block size.
+    """
+    b = 1
+    while b * 2 <= limit and m % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def auto_block_rows(
+    m: int, t: int, vmem_budget_bytes: int = _VMEM_BUDGET_BYTES
+) -> int:
+    """Largest power-of-two divisor of ``m`` whose (block_rows, T) block
+    (4 x uint32/int32 buffers: in/out keys/values) fits the VMEM budget."""
+    return largest_pow2_divisor(m, max(vmem_budget_bytes // (4 * 4 * t), 1))
+
+
+def effective_block_rows(m: int, t: int, block_rows: int | None) -> int:
+    """Resolve a requested block_rows against an actual tile count: None
+    = auto VMEM fill; an explicit power of two is an UPPER BOUND, clamped
+    to the largest power-of-two divisor of ``m`` (recursion levels with
+    odd row counts degrade gracefully to smaller blocks)."""
+    if block_rows is None:
+        return auto_block_rows(m, t)
+    assert block_rows >= 1 and block_rows & (block_rows - 1) == 0, block_rows
+    return largest_pow2_divisor(m, block_rows)
+
+
+def _bitonic_block_kernel(k_ref, v_ref, ko_ref, vo_ref, *rest, num_samples: int):
+    keys = k_ref[...]  # (block_rows, T)
+    vals = v_ref[...]
+    keys, vals = bitonic_network_rows(keys, vals)
+    ko_ref[...] = keys
+    vo_ref[...] = vals
+    if num_samples:
+        sk_ref, sv_ref = rest
+        b, t = keys.shape
+        chunk = t // num_samples
+        # Sample j of a sorted row is element (j+1)*T/s - 1 == the last
+        # element of chunk j — a reshape + slice, no gather needed.
+        sk_ref[...] = keys.reshape(b, num_samples, chunk)[:, :, -1]
+        sv_ref[...] = vals.reshape(b, num_samples, chunk)[:, :, -1]
+
+
+def _sort_tiles_call(keys, vals, num_samples: int, block_rows, interpret: bool):
+    m, t = keys.shape
+    assert vals.shape == (m, t)
+    assert keys.dtype == jnp.uint32 and vals.dtype == jnp.int32
+    block_rows = effective_block_rows(m, t, block_rows)
+    if num_samples:
+        assert t % num_samples == 0, (t, num_samples)
+
+    grid = (m // block_rows,)
+    blk = pl.BlockSpec((block_rows, t), lambda i: (i, 0))
+    out_specs = [blk, blk]
+    out_shape = [
+        jax.ShapeDtypeStruct((m, t), jnp.uint32),
+        jax.ShapeDtypeStruct((m, t), jnp.int32),
+    ]
+    if num_samples:
+        sblk = pl.BlockSpec((block_rows, num_samples), lambda i: (i, 0))
+        out_specs += [sblk, sblk]
+        out_shape += [
+            jax.ShapeDtypeStruct((m, num_samples), jnp.uint32),
+            jax.ShapeDtypeStruct((m, num_samples), jnp.int32),
+        ]
+    return pl.pallas_call(
+        functools.partial(_bitonic_block_kernel, num_samples=num_samples),
+        grid=grid,
+        in_specs=[blk, blk],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        # Blocks are independent: let Mosaic parallelize the grid axis.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)
+        ),
+        interpret=interpret,
+    )(keys, vals)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def sort_tiles_kv(
+    keys: jax.Array,
+    vals: jax.Array,
+    *,
+    block_rows: int | None = None,
+    interpret: bool = True,
+):
+    """Sort each row of (m, T) keys/vals independently, lexicographically.
+
+    keys: uint32 canonical sort keys, shape (m, T), T a power of two.
+    vals: int32 payload (original indices for stability), same shape.
+    block_rows: tiles sorted per grid program (None = auto VMEM fill;
+        explicit values are clamped, see :func:`effective_block_rows`).
+        ``block_rows=1`` reproduces the per-tile baseline layout.
+    Returns (sorted_keys, sorted_vals), each row ascending.
+    """
+    sk, sv = _sort_tiles_call(keys, vals, 0, block_rows, interpret)
+    return sk, sv
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_samples", "block_rows", "interpret")
+)
+def sort_tiles_sample_kv(
+    keys: jax.Array,
+    vals: jax.Array,
+    *,
+    num_samples: int,
+    block_rows: int | None = None,
+    interpret: bool = True,
+):
+    """Row-blocked tile sort with Step-3 sample extraction fused in.
+
+    Returns (sorted_keys (m, T), sorted_vals (m, T),
+             sample_keys (m, s), sample_vals (m, s)) where sample j of
+    row i is sorted element (j+1)*T/s - 1 — the paper's s equidistant
+    local samples — emitted while the sorted block is still in VMEM.
+    """
+    return tuple(_sort_tiles_call(keys, vals, num_samples, block_rows, interpret))

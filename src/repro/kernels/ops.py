@@ -75,13 +75,47 @@ def sort_tiles(
     *,
     impl: str | None = None,
     interpret: bool | None = None,
+    block_rows: int | None = None,
 ):
-    """Sort each row of (m, T) canonical-uint32 keys (+int32 payload)."""
+    """Sort each row of (m, T) canonical-uint32 keys (+int32 payload).
+
+    block_rows: tiles per grid program on the pallas path (None = auto
+    VMEM fill, see bitonic.auto_block_rows); ignored on the xla path.
+    """
     impl = impl or default_impl()
     if impl == "pallas":
         interpret = default_interpret() if interpret is None else interpret
-        return _bitonic.sort_tiles_kv(keys, vals, interpret=interpret)
+        return _bitonic.sort_tiles_kv(
+            keys, vals, block_rows=block_rows, interpret=interpret
+        )
     return _ref.sort_tiles_kv(keys, vals)
+
+
+def sort_tiles_sample(
+    keys: jax.Array,
+    vals: jax.Array,
+    *,
+    num_samples: int,
+    impl: str | None = None,
+    interpret: bool | None = None,
+    block_rows: int | None = None,
+):
+    """Fused Steps 2+3: sorted (m, T) tiles plus the s equidistant
+    per-tile samples, from one read of the tiles.
+
+    Returns (sorted_keys, sorted_vals, sample_keys (m, s), sample_vals).
+    """
+    impl = impl or default_impl()
+    if impl == "pallas":
+        interpret = default_interpret() if interpret is None else interpret
+        return _bitonic.sort_tiles_sample_kv(
+            keys,
+            vals,
+            num_samples=num_samples,
+            block_rows=block_rows,
+            interpret=interpret,
+        )
+    return _ref.sort_tiles_sample_kv(keys, vals, num_samples=num_samples)
 
 
 def splitter_ranks(
@@ -96,6 +130,22 @@ def splitter_ranks(
             keys, vals, sp_keys, sp_vals, interpret=interpret
         )
     return _ref.splitter_ranks(keys, vals, sp_keys, sp_vals)
+
+
+def splitter_partition(
+    keys, vals, sp_keys, sp_vals, *, impl: str | None = None,
+    interpret: bool | None = None, block_rows: int | None = None,
+):
+    """Fused Steps 6+7 epilogue: (ranks (m, S), counts (m, S+1)) per tile
+    from one read of the tiles (canonical uint32 keys)."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        interpret = default_interpret() if interpret is None else interpret
+        return _splitter.splitter_partition(
+            keys, vals, sp_keys, sp_vals,
+            block_rows=block_rows, interpret=interpret,
+        )
+    return _ref.splitter_partition(keys, vals, sp_keys, sp_vals)
 
 
 def topk(
@@ -116,17 +166,10 @@ def topk(
     r, c = u.shape
     if impl == "pallas":
         interpret = default_interpret() if interpret is None else interpret
-        block_rows = _pick_block_rows(r)
+        block_rows = _bitonic.largest_pow2_divisor(r, 256)
         tk, ti = _topk.topk_desc(
             u, k=k, block_rows=block_rows, interpret=interpret
         )
     else:
         tk, ti = _ref.topk_desc(u, k=k)
     return from_sortable(~tk, orig_dtype), ti
-
-
-def _pick_block_rows(r: int) -> int:
-    for b in (256, 128, 64, 32, 16, 8, 4, 2, 1):
-        if r % b == 0:
-            return b
-    return 1

@@ -17,6 +17,18 @@ def sort_tiles_kv(keys: jax.Array, vals: jax.Array):
     return jax.lax.sort((keys, vals), dimension=-1, num_keys=2)
 
 
+def sort_tiles_sample_kv(keys: jax.Array, vals: jax.Array, *, num_samples: int):
+    """Oracle for the fused sort+sample kernel: sorted rows plus the
+    s equidistant samples (elements (j+1)*T/s - 1) of each sorted row."""
+    m, t = keys.shape
+    assert t % num_samples == 0, (t, num_samples)
+    sk, sv = jax.lax.sort((keys, vals), dimension=-1, num_keys=2)
+    chunk = t // num_samples
+    samp_k = sk.reshape(m, num_samples, chunk)[:, :, -1]
+    samp_v = sv.reshape(m, num_samples, chunk)[:, :, -1]
+    return sk, sv, samp_k, samp_v
+
+
 def splitter_ranks(keys, vals, sp_keys, sp_vals):
     """(m, S) ranks: # elements of tile i lexicographically < splitter (i, j).
 
@@ -27,6 +39,16 @@ def splitter_ranks(keys, vals, sp_keys, sp_vals):
         & (vals[:, :, None] < sp_vals[:, None, :])
     )
     return jnp.sum(lt.astype(jnp.int32), axis=1)
+
+
+def splitter_partition(keys, vals, sp_keys, sp_vals):
+    """Oracle for the fused Step 6+7 epilogue: (ranks (m, S),
+    counts (m, S+1)) where counts[i, j] = size of bucket j in tile i."""
+    m, t = keys.shape
+    ranks = splitter_ranks(keys, vals, sp_keys, sp_vals)
+    starts = jnp.concatenate([jnp.zeros((m, 1), jnp.int32), ranks], axis=1)
+    ends = jnp.concatenate([ranks, jnp.full((m, 1), t, jnp.int32)], axis=1)
+    return ranks, ends - starts
 
 
 def topk_desc(keys: jax.Array, *, k: int):

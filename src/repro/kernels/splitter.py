@@ -10,6 +10,15 @@ reduced over T.  This is branch-free, needs no serialization, and the
 matrix (T*S bytes of i8 predicate) fits comfortably in VMEM for
 T <= 16K, S <= 256.
 
+Two entry points (see DESIGN.md §3):
+  * ``splitter_ranks`` — the standalone Step-6 kernel, kept as the
+    reference path (ranks only).
+  * ``splitter_partition`` — the FUSED epilogue used by the hot path:
+    one read of the tiles produces both the ranks AND the per-tile
+    bucket counts (Step 7's input), so the count derivation never
+    touches HBM again.  It is also row-blocked: one grid program
+    partitions ``block_rows`` tiles.
+
 Comparison is lexicographic on (key, value) to match the sort kernel.
 """
 
@@ -20,6 +29,17 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.bitonic import largest_pow2_divisor
+
+
+def _lt_matrix(keys, vals, sk, sv):
+    """(..., T, S) lexicographic (key, val) < (splitter key, splitter val)."""
+    return (keys[..., :, None] < sk[..., None, :]) | (
+        (keys[..., :, None] == sk[..., None, :])
+        & (vals[..., :, None] < sv[..., None, :])
+    )
 
 
 def _splitter_kernel(k_ref, v_ref, sk_ref, sv_ref, out_ref):
@@ -27,9 +47,7 @@ def _splitter_kernel(k_ref, v_ref, sk_ref, sv_ref, out_ref):
     vals = v_ref[0, :]
     sk = sk_ref[0, :]  # (S,)
     sv = sv_ref[0, :]
-    lt = (keys[:, None] < sk[None, :]) | (
-        (keys[:, None] == sk[None, :]) & (vals[:, None] < sv[None, :])
-    )
+    lt = _lt_matrix(keys, vals, sk, sv)
     out_ref[0, :] = jnp.sum(lt.astype(jnp.int32), axis=0)
 
 
@@ -65,5 +83,73 @@ def splitter_ranks(
         in_specs=[tile_spec, tile_spec, sp_spec, sp_spec],
         out_specs=pl.BlockSpec((1, s), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, s), jnp.int32),
+        interpret=interpret,
+    )(keys, vals, sp_keys, sp_vals)
+
+
+def _partition_kernel(k_ref, v_ref, sk_ref, sv_ref, ranks_ref, counts_ref):
+    keys = k_ref[...]  # (block_rows, T)
+    vals = v_ref[...]
+    sk = sk_ref[...]  # (block_rows, S)
+    sv = sv_ref[...]
+    t = keys.shape[1]
+    lt = _lt_matrix(keys, vals, sk, sv)  # (block_rows, T, S)
+    ranks = jnp.sum(lt.astype(jnp.int32), axis=1)  # (block_rows, S)
+    ranks_ref[...] = ranks
+    # Bucket j of a sorted tile is [start_j, end_j) with start_0 = 0,
+    # start_j = ranks[j-1], end_{S} = T: counts = ends - starts, computed
+    # here so Step 7 never re-reads the tiles.
+    starts = jnp.concatenate([jnp.zeros_like(ranks[:, :1]), ranks], axis=1)
+    ends = jnp.concatenate([ranks, jnp.full_like(ranks[:, :1], t)], axis=1)
+    counts_ref[...] = ends - starts
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def splitter_partition(
+    keys: jax.Array,
+    vals: jax.Array,
+    sp_keys: jax.Array,
+    sp_vals: jax.Array,
+    *,
+    block_rows: int | None = None,
+    interpret: bool = True,
+):
+    """Fused Step 6+7 epilogue: splitter ranks AND bucket counts per tile.
+
+    Same inputs as :func:`splitter_ranks`.  Returns
+      ranks  (m, S)   int32 — rank of splitter j in tile i, and
+      counts (m, S+1) int32 — size of bucket j in tile i (sums to T),
+    from a single HBM read of the tiles.  ``block_rows`` tiles are
+    partitioned per grid program (None = auto; must divide m).
+    """
+    m, t = keys.shape
+    s = sp_keys.shape[1]
+    assert sp_keys.shape == (m, s) and sp_vals.shape == (m, s)
+    assert keys.dtype == jnp.uint32 and vals.dtype == jnp.int32
+    assert sp_keys.dtype == jnp.uint32 and sp_vals.dtype == jnp.int32
+    # (T x S) i32 comparison matrix per row dominates VMEM here.
+    per_row = 4 * t * (s + 2)
+    limit = max((4 * 1024 * 1024) // per_row, 1)
+    if block_rows is not None:
+        limit = min(limit, block_rows)
+    block_rows = largest_pow2_divisor(m, limit)
+    grid = (m // block_rows,)
+    tile_spec = pl.BlockSpec((block_rows, t), lambda i: (i, 0))
+    sp_spec = pl.BlockSpec((block_rows, s), lambda i: (i, 0))
+    return pl.pallas_call(
+        _partition_kernel,
+        grid=grid,
+        in_specs=[tile_spec, tile_spec, sp_spec, sp_spec],
+        out_specs=[
+            pl.BlockSpec((block_rows, s), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, s + 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, s), jnp.int32),
+            jax.ShapeDtypeStruct((m, s + 1), jnp.int32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)
+        ),
         interpret=interpret,
     )(keys, vals, sp_keys, sp_vals)

@@ -96,7 +96,9 @@ def resolve(axes, rules, axis_sizes, shape=None) -> P:
             total = math.prod(axis_sizes.get(a, 1) for a in mt)
             if shape is not None and shape[i] % total != 0:
                 continue
-            parts[i] = mesh_ax
+            # singleton tuples unwrap to the bare name: identical sharding,
+            # and PartitionSpec equality on older jax is not normalized
+            parts[i] = mt[0] if len(mt) == 1 else mesh_ax
             used.update(mt)
             resolved[i] = True
     while parts and parts[-1] is None:

@@ -1,5 +1,7 @@
 """Unit tests for the single-device GPU BUCKET SORT (Algorithm 1)."""
 
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -59,6 +61,40 @@ def test_bfloat16_keys(rng):
     out = np.asarray(bucket_sort.sort(xb, CFG).astype(jnp.float32))
     ref = np.sort(np.asarray(xb.astype(jnp.float32)))
     np.testing.assert_array_equal(out, ref)
+
+
+@pytest.mark.parametrize("dist", ["uniform", "dup", "equal"])
+def test_gather_relocation_matches_scatter_reference(rng, dist):
+    """The scatter-free relocation/compaction (DESIGN.md §4) must produce
+    the IDENTICAL permutation as the legacy scatter formulation, and the
+    fused sampling/ranking epilogues must not change it either."""
+    n = 5000
+    if dist == "uniform":
+        x = rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32)
+    elif dist == "dup":
+        x = rng.integers(0, 7, n).astype(np.int32)
+    else:
+        x = np.full(n, 42, np.int32)
+    base = dataclasses.replace(
+        CFG, relocation="scatter", fuse_sampling=False, fuse_ranking=False
+    )
+    want = np.asarray(bucket_sort.argsort(jnp.asarray(x), base))
+    for cfg in [
+        CFG,  # gather + fused (the default hot path)
+        dataclasses.replace(CFG, relocation="scatter"),
+        dataclasses.replace(CFG, fuse_sampling=False),
+        dataclasses.replace(CFG, fuse_ranking=False),
+    ]:
+        got = np.asarray(bucket_sort.argsort(jnp.asarray(x), cfg))
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("block_rows", [1, 4])
+def test_explicit_block_rows_sorts(rng, block_rows):
+    cfg = dataclasses.replace(CFG, block_rows=block_rows)
+    x = rng.integers(0, 100_000, 20_000).astype(np.int32)
+    out = np.asarray(bucket_sort.sort(jnp.asarray(x), cfg))
+    np.testing.assert_array_equal(out, np.sort(x))
 
 
 def test_deterministic_across_runs(rng):

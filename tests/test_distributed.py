@@ -28,8 +28,8 @@ def test_distributed_sort_8dev():
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.distributed_sort import make_sharded_sort
         from repro.core.sort_config import SortConfig
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         cfg = SortConfig(tile=256, s=16, direct_max=512, impl="xla")
         rng = np.random.default_rng(3)
         for n, axis in [(8192, "data"), (8192, ("data", "model"))]:
@@ -119,13 +119,14 @@ def test_compressed_allreduce_8dev():
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.optim.compress import allreduce_compressed
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("data",))
         def body(g):
             mean, res = allreduce_compressed({"w": g}, "data")
             exact = jax.lax.pmean(g, "data")
             return mean["w"][None], res["w"][None], exact[None]
-        f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P("data"),),
+        from repro.compat import shard_map
+        f = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("data"),),
                     out_specs=(P("data"), P("data"), P("data"))))
         rng = np.random.default_rng(0)
         g = jnp.asarray(rng.normal(size=(8, 1024)).astype(np.float32))

@@ -6,24 +6,94 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import bitonic, ops, ref
+
+
+def _keys(rng, m, t, dtype):
+    """Adversarial key matrix: duplicates everywhere; floats get NaN,
+    +/-0.0 and +/-inf sprinkled in (total-order canonicalization)."""
+    if dtype == np.float32:
+        k = rng.normal(size=(m, t)).astype(dtype)
+        flat = k.reshape(-1)
+        n_special = max(flat.size // 16, 8)
+        pos = rng.choice(flat.size, size=n_special, replace=False)
+        specials = np.array([np.nan, -0.0, 0.0, np.inf, -np.inf], dtype)
+        flat[pos] = specials[rng.integers(0, len(specials), n_special)]
+        return flat.reshape(m, t)
+    return rng.integers(0, 97, size=(m, t)).astype(dtype)  # duplicates
 
 
 @pytest.mark.parametrize("m,t", [(1, 128), (3, 256), (8, 512), (2, 1024)])
 @pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.float32])
 def test_bitonic_sort_tiles(rng, m, t, dtype):
-    if dtype == np.float32:
-        k = rng.normal(size=(m, t)).astype(dtype)
-    else:
-        k = rng.integers(0, 97, size=(m, t)).astype(dtype)  # duplicates
+    k = _keys(rng, m, t, dtype)
     ku = ops.to_sortable(jnp.asarray(k))
     v = jnp.tile(jnp.arange(t, dtype=jnp.int32), (m, 1))
     sk_p, sv_p = ops.sort_tiles(ku, v, impl="pallas", interpret=True)
     sk_r, sv_r = ref.sort_tiles_kv(ku, v)
     np.testing.assert_array_equal(np.asarray(sk_p), np.asarray(sk_r))
     np.testing.assert_array_equal(np.asarray(sv_p), np.asarray(sv_r))
-    back = np.asarray(ops.from_sortable(sk_p, jnp.dtype(dtype)))
-    np.testing.assert_array_equal(back, np.sort(k, axis=-1))
+
+
+@pytest.mark.parametrize("block_rows", [1, 4, 8])
+@pytest.mark.parametrize("t", [256, 1024, 4096])
+@pytest.mark.parametrize("dtype", [np.uint32, np.int32, np.float32])
+def test_blocked_sort_tiles_bitexact(rng, block_rows, t, dtype):
+    """Row-blocked kernel vs ref.py oracle: bit-exact on every dtype,
+    including NaN / -0.0 floats (via canonical keys) and duplicates."""
+    m = 8  # divisible by every block_rows under test
+    k = _keys(rng, m, t, dtype)
+    ku = ops.to_sortable(jnp.asarray(k))
+    v = jnp.tile(jnp.arange(t, dtype=jnp.int32), (m, 1))
+    sk_p, sv_p = bitonic.sort_tiles_kv(
+        ku, v, block_rows=block_rows, interpret=True
+    )
+    sk_r, sv_r = ref.sort_tiles_kv(ku, v)
+    np.testing.assert_array_equal(np.asarray(sk_p), np.asarray(sk_r))
+    np.testing.assert_array_equal(np.asarray(sv_p), np.asarray(sv_r))
+    # bit-exact in the canonical total-order domain (covers NaN payloads
+    # and the -0.0 < +0.0 distinction that np.sort on floats erases)
+    np.testing.assert_array_equal(
+        np.asarray(sk_p), np.sort(np.asarray(ku), axis=-1)
+    )
+
+
+@pytest.mark.parametrize("block_rows", [1, 4, 8])
+def test_blocked_sort_all_duplicates(block_rows):
+    """All-equal keys: payload order (stability) is the whole contract."""
+    m, t = 8, 256
+    ku = jnp.full((m, t), jnp.uint32(42))
+    v = jnp.tile(jnp.arange(t, dtype=jnp.int32)[::-1], (m, 1))
+    sk, sv = bitonic.sort_tiles_kv(ku, v, block_rows=block_rows, interpret=True)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(ku))
+    np.testing.assert_array_equal(
+        np.asarray(sv), np.tile(np.arange(t, dtype=np.int32), (m, 1))
+    )
+
+
+@pytest.mark.parametrize("block_rows", [1, 4])
+@pytest.mark.parametrize("t,s", [(256, 16), (1024, 64)])
+def test_fused_sample_extraction(rng, block_rows, t, s):
+    """sort_tiles_sample == sort + strided sample slice of the oracle."""
+    m = 8
+    k = rng.integers(0, 10_000, size=(m, t)).astype(np.int32)
+    ku = ops.to_sortable(jnp.asarray(k))
+    v = jnp.tile(jnp.arange(t, dtype=jnp.int32), (m, 1))
+    sk_p, sv_p, sampk_p, sampv_p = ops.sort_tiles_sample(
+        ku, v, num_samples=s, impl="pallas", interpret=True,
+        block_rows=block_rows,
+    )
+    sk_r, sv_r, sampk_r, sampv_r = ref.sort_tiles_sample_kv(
+        ku, v, num_samples=s
+    )
+    for got, want in [(sk_p, sk_r), (sv_p, sv_r), (sampk_p, sampk_r),
+                      (sampv_p, sampv_r)]:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # samples are the paper's equidistant positions (j+1)*T/s - 1
+    idx = (np.arange(1, s + 1) * (t // s)) - 1
+    np.testing.assert_array_equal(
+        np.asarray(sampk_p), np.asarray(sk_r)[:, idx]
+    )
 
 
 def test_bitonic_stability(rng):
@@ -59,6 +129,25 @@ def test_splitter_ranks(rng, m, t, s):
         manual = [(k[i] < spv_i).sum() for spv_i in
                   np.asarray(ops.from_sortable(spk[i], jnp.int32))]
         np.testing.assert_array_equal(got, manual)
+
+
+@pytest.mark.parametrize("block_rows", [None, 1, 4])
+@pytest.mark.parametrize("m,t,s", [(4, 256, 7), (8, 512, 15)])
+def test_splitter_partition_fused(rng, block_rows, m, t, s):
+    """Fused Step 6+7 epilogue vs oracle: ranks and bucket counts."""
+    k = rng.integers(0, 1000, size=(m, t)).astype(np.int32)
+    ku = ops.to_sortable(jnp.asarray(k))
+    v = jnp.tile(jnp.arange(t, dtype=jnp.int32), (m, 1))
+    spk = ops.to_sortable(jnp.asarray(
+        np.sort(rng.integers(0, 1000, size=(m, s)), axis=1).astype(np.int32)))
+    spv = jnp.zeros((m, s), jnp.int32)
+    r_p, c_p = ops.splitter_partition(
+        ku, v, spk, spv, impl="pallas", interpret=True, block_rows=block_rows
+    )
+    r_r, c_r = ref.splitter_partition(ku, v, spk, spv)
+    np.testing.assert_array_equal(np.asarray(r_p), np.asarray(r_r))
+    np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_r))
+    assert (np.asarray(c_p).sum(axis=1) == t).all()  # counts partition T
 
 
 @pytest.mark.parametrize("r,c,k", [(8, 64, 4), (256, 128, 8), (64, 32, 32)])

@@ -10,7 +10,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dep (pip install -e '.[test]')"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import bucket_sort, partial_sort
 from repro.core.sort_config import SortConfig
