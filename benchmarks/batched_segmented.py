@@ -1,0 +1,92 @@
+"""Batched & segmented sort suites (DESIGN.md §5): one batch launch vs
+a python loop of per-row 1-D sorts, vs XLA's native row sort.
+
+The paper's capacity bound holds per row, so B independent sorts ride
+one `_sort_rows` recursion — the `batch_vs_loop` speedup is the whole
+point of the subsystem (heavy-traffic serving: many vocab-sized rows
+and ragged segments per request batch, not one giant array).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import baselines, bucket_sort, partial_sort
+from repro.core.sort_config import SortConfig
+
+CFG = SortConfig(tile=4096, s=64, direct_max=8192, impl="xla")
+
+
+def run_batched(b=256, l=2048, k=64, repeats=3):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, (b, l)).astype(np.int32))
+
+    t_batch = timeit(lambda a: bucket_sort.sort_batched(a, CFG), x,
+                     repeats=repeats)
+    # Per-row loop: B separate 1-D pipeline launches (rows share one jit
+    # cache entry — the loop cost is launches, not retracing).
+    t_loop = timeit(
+        lambda a: [bucket_sort.sort(a[i], CFG) for i in range(b)], x,
+        repeats=repeats,
+    )
+    t_xla = timeit(lambda a: baselines.xla_sort_batched(a)[0], x,
+                   repeats=repeats)
+
+    logits = jnp.asarray(rng.normal(size=(b, l)).astype(np.float32))
+    t_topk_b = timeit(lambda a: partial_sort.topk_batched(a, k, CFG)[0],
+                      logits, repeats=repeats)
+    t_topk_l = timeit(
+        lambda a: [partial_sort.topk(a[i], k, CFG)[0] for i in range(b)],
+        logits, repeats=repeats,
+    )
+    t_lax = timeit(lambda a: jax.lax.top_k(a, k)[0], logits, repeats=repeats)
+
+    return [
+        dict(name=f"batched/sort_batched_b={b}_l={l}",
+             us_per_call=t_batch * 1e6,
+             derived=f"batch_vs_loop={t_loop/t_batch:.2f}x "
+                     f"xla_batched={t_xla*1e6:.0f}us"),
+        dict(name=f"batched/sort_loop_b={b}_l={l}", us_per_call=t_loop * 1e6,
+             derived="B separate 1-D launches"),
+        dict(name=f"batched/topk_batched_b={b}_l={l}_k={k}",
+             us_per_call=t_topk_b * 1e6,
+             derived=f"batch_vs_loop={t_topk_l/t_topk_b:.2f}x "
+                     f"lax_top_k={t_lax*1e6:.0f}us"),
+    ]
+
+
+def run_segmented(n=262144, segments=256, repeats=3):
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32))
+    # Mildly ragged serving-style segments (lengths ~ mean * U[0.5, 1.5],
+    # a few empties): the packed width W = max length bounds the padding
+    # waste, so wildly skewed raggedness belongs to the per-segment loop.
+    w = rng.uniform(0.5, 1.5, segments)
+    w[rng.integers(0, segments, max(segments // 32, 1))] = 0.0  # empties
+    lens = np.floor(w / w.sum() * n).astype(np.int64)
+    lens[-1] += n - lens.sum()
+    off = np.concatenate([[0], np.cumsum(lens)])
+
+    t_seg = timeit(lambda a: bucket_sort.segment_sort(a, off, CFG), x,
+                   repeats=repeats)
+    # Per-segment loop: one 1-D launch per non-empty segment; every
+    # distinct length is its own jit signature (the retrace/launch cost
+    # the packed layout removes).
+    nz = [(int(off[i]), int(off[i + 1])) for i in range(segments)
+          if lens[i] > 0]
+    t_loop = timeit(
+        lambda a: [bucket_sort.sort(a[lo:hi], CFG) for lo, hi in nz], x,
+        repeats=repeats,
+    )
+    w = int(lens.max())
+    return [
+        dict(name=f"segmented/segment_sort_n={n}_s={segments}",
+             us_per_call=t_seg * 1e6,
+             derived=f"batch_vs_loop={t_loop/t_seg:.2f}x max_seg={w}"),
+        dict(name=f"segmented/segment_loop_n={n}_s={segments}",
+             us_per_call=t_loop * 1e6,
+             derived=f"{len(nz)} per-segment launches"),
+    ]

@@ -22,6 +22,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes (CI/container friendly)")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument("--suite", default=None,
+                    help="comma-separated suite names: run only these and "
+                         "MERGE their rows into the JSON record (rows from "
+                         "suites not run are preserved — unlike --only, "
+                         "which skips writing entirely)")
     ap.add_argument("--json", default=None,
                     help="output path for machine-readable rows; default "
                          "BENCH_sort.json, but a --only run does NOT "
@@ -29,10 +34,16 @@ def main() -> None:
                          "file is the cross-PR perf record and a partial "
                          "row set would clobber it); '' disables")
     args = ap.parse_args()
+    if args.suite and args.only:
+        ap.error("--suite and --only are mutually exclusive")
+    merge = bool(args.suite)
+    if args.suite:
+        args.only = args.suite
     if args.json is None:
-        args.json = "" if args.only else "BENCH_sort.json"
+        args.json = "" if (args.only and not merge) else "BENCH_sort.json"
 
     from benchmarks import (
+        batched_segmented,
         distribution_robustness,
         moe_dispatch,
         sample_size_sweep,
@@ -56,8 +67,16 @@ def main() -> None:
             tokens=4096 if quick else 16384),
         "topk_partial": lambda: topk_partial.run(
             vocab=65536 if quick else 151936),
+        "batched": lambda: batched_segmented.run_batched(
+            b=64 if quick else 256, l=2048),
+        "segmented": lambda: batched_segmented.run_segmented(
+            n=65536 if quick else 262144, segments=64 if quick else 256),
     }
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(suites)
+        if unknown:
+            ap.error(f"unknown suite(s): {sorted(unknown)}")
 
     print("name,us_per_call,derived")
     failures = 0
@@ -83,11 +102,31 @@ def main() -> None:
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
 
     if args.json:
+        ran = sorted(only) if only else sorted(suites)
+        now = time.strftime("%Y-%m-%dT%H:%M:%S%z")
+        suite_meta: dict = {}
+        if merge and os.path.exists(args.json):
+            # --suite: keep the recorded rows (and per-suite measurement
+            # conditions) of suites NOT run this time.  Row names are
+            # "<suite>/<case>"; suite-level ERROR rows are named bare
+            # "<suite>".
+            with open(args.json) as f:
+                old = json.load(f)
+            kept = [r for r in old.get("rows", [])
+                    if r["name"].split("/")[0] not in only]
+            all_rows = kept + all_rows
+            suite_meta = {k: v for k, v in old.get("suite_meta", {}).items()
+                          if k not in only}
+        # quick/timestamp describe only THIS invocation; per-row
+        # conditions live in suite_meta (rows can be merged across runs).
+        for s in ran:
+            suite_meta[s] = dict(quick=quick, timestamp=now)
         payload = dict(
             schema="bench_sort/v1",
             quick=quick,
             only=sorted(only) if only else None,
-            timestamp=time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            timestamp=now,
+            suite_meta=dict(sorted(suite_meta.items())),
             rows=all_rows,
         )
         with open(args.json, "w") as f:

@@ -1,19 +1,38 @@
 # The paper's primary contribution: deterministic sample sort (GPU BUCKET
 # SORT, Dehne & Zaboli 2010) adapted to TPU — single-device Algorithm 1,
-# the multi-chip/pod distributed variant, partial (top-k) sort, and the
+# the batched/segmented layer (many independent sorts per launch), the
+# multi-chip/pod distributed variant, partial (top-k) sort, and the
 # baselines the paper compares against.
 
-from repro.core.bucket_sort import argsort, sort, sort_kv, sort_with_stats
+from repro.core.bucket_sort import (
+    argsort,
+    argsort_batched,
+    segment_argsort,
+    segment_sort,
+    sort,
+    sort_batched,
+    sort_batched_with_stats,
+    sort_kv,
+    sort_kv_batched,
+    sort_with_stats,
+)
 from repro.core.distributed_sort import DistSortSpec, make_sharded_sort, sorted_shard
-from repro.core.partial_sort import topk
+from repro.core.partial_sort import topk, topk_batched
 from repro.core.sort_config import DEFAULT_CONFIG, PAPER_CONFIG, SortConfig
 
 __all__ = [
     "argsort",
+    "argsort_batched",
+    "segment_argsort",
+    "segment_sort",
     "sort",
+    "sort_batched",
+    "sort_batched_with_stats",
     "sort_kv",
+    "sort_kv_batched",
     "sort_with_stats",
     "topk",
+    "topk_batched",
     "SortConfig",
     "DEFAULT_CONFIG",
     "PAPER_CONFIG",

@@ -227,3 +227,16 @@ def xla_sort(x: jax.Array):
     u = ops.to_sortable(x)
     sk, sv = jax.lax.sort((u, idx), dimension=0, num_keys=2)
     return ops.from_sortable(sk, x.dtype), sv
+
+
+@jax.jit
+def xla_sort_batched(x: jax.Array):
+    """XLA's built-in row-wise sort of (B, L): the reference oracle and
+    perf baseline for ``sort_batched`` (stable via index tiebreak)."""
+    b, length = x.shape
+    idx = jnp.broadcast_to(
+        jnp.arange(length, dtype=jnp.int32)[None, :], (b, length)
+    )
+    u = ops.to_sortable(x)
+    sk, sv = jax.lax.sort((u, idx), dimension=1, num_keys=2)
+    return ops.from_sortable(sk, x.dtype), sv

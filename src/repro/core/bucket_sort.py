@@ -23,6 +23,13 @@ regular-sampling bound makes this capacity *guaranteed*, which is what
 lets the whole sort be expressed with static shapes (a hard requirement
 under XLA).  Randomized sample sort admits no such static capacity.
 
+The guarantee holds PER ROW, so the same machinery sorts many
+independent arrays in one launch (DESIGN.md §5): the batched entry
+points put B independent sorts on the rows of one (B, L) array and run
+the whole batch through a single `_sort_rows` recursion — one kernel
+launch per pipeline step for the entire batch, no vmap over the 1-D
+entry point, no per-row retracing.
+
 Relocation/compaction are SCATTER-FREE on the default path (DESIGN.md
 §4): both passes compute, for every destination slot, the source index
 it must read (via a binary search over the chunk-offset tables) and
@@ -31,13 +38,42 @@ vectorizes.  ``cfg.relocation="scatter"`` keeps the legacy
 destination-scatter formulation as a reference path.
 
 Correctness invariants (tested, incl. hypothesis properties):
-  * elements are (key, payload) pairs, payload = original index =>
-    all pairs are unique => the capacity bound holds for ANY input
-    (duplicates included) and the sort is STABLE;
-  * pad elements introduced anywhere in the recursion draw unique
-    payloads from one globally-monotone range (threaded ``pad_base``),
-    so pads are unique too, obey the same bound, sort after every real
-    element, and nothing is ever silently dropped (asserted in tests).
+  * elements are (key, payload) pairs, payload = original index within
+    the row => all pairs are unique PER ROW (rows never compare against
+    each other) => the capacity bound holds for ANY input (duplicates
+    included) and the sort is STABLE;
+  * pad elements introduced anywhere in the recursion draw payloads
+    from one monotone per-row range (threaded ``pad_base``): pad
+    payloads are unique within their row, exceed every real payload in
+    the row, sort after every real element, and nothing is ever
+    silently dropped (asserted in tests).  ``pad_base`` advances by
+    per-row amounts, so the int32 payload budget is independent of the
+    batch size.
+
+Usage::
+
+    from repro.core import bucket_sort
+    from repro.core.sort_config import SortConfig
+
+    y = bucket_sort.sort(x)                    # 1-D, ascending, stable
+    perm = bucket_sort.argsort(x)              # == np.argsort(x, kind="stable")
+    sk, sv = bucket_sort.sort_kv(x, payload)   # payload rides along
+
+    # Batched: B independent sorts in ONE launch (B, L) -> (B, L).
+    ys = bucket_sort.sort_batched(xs)
+    perms = bucket_sort.argsort_batched(xs)
+    sk, sv = bucket_sort.sort_kv_batched(xs, payloads)
+
+    # Segmented (ragged): sort within [off[i], off[i+1]) independently.
+    # segment_offsets must be host-known ints (static shapes under XLA).
+    y = bucket_sort.segment_sort(x, [0, 3, 3, 10, len(x)])
+    perm = bucket_sort.segment_argsort(x, offsets)   # global indices
+
+    # Bound introspection (paper's capacity guarantee):
+    y, perm, stats = bucket_sort.sort_with_stats(x)          # 1-D
+    ys, perms, stats = bucket_sort.sort_batched_with_stats(xs)
+    # stats: one dict per bucket round; [] when the input fits
+    # cfg.direct_max (single-tile path, no bucket round).
 """
 
 from __future__ import annotations
@@ -46,6 +82,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, next_pow2, round_up
 from repro.kernels import ops
@@ -55,20 +92,24 @@ _INT_MAX = 2**31 - 1
 
 
 def _pad_cols(keys, vals, new_len, pad_base):
-    """Pad the last axis to new_len with (MAXU, pad_base + iota) pairs."""
+    """Pad the last axis to new_len with (MAXU, pad_base + j) pairs.
+
+    Pad payloads are unique PER ROW (rows never compare against each
+    other) and >= pad_base > every real payload in the row, so pads
+    sort after all real elements and the pad budget is independent of
+    the row count.
+    """
     r, length = keys.shape
     extra = new_len - length
     if extra == 0:
         return keys, vals, pad_base
     pk = jnp.full((r, extra), _MAXU, jnp.uint32)
-    pv = (
-        jnp.int32(pad_base)
-        + jax.lax.broadcasted_iota(jnp.int32, (r, extra), 0) * extra
-        + jax.lax.broadcasted_iota(jnp.int32, (r, extra), 1)
+    pv = jnp.int32(pad_base) + jax.lax.broadcasted_iota(
+        jnp.int32, (r, extra), 1
     )
     keys = jnp.concatenate([keys, pk], axis=1)
     vals = jnp.concatenate([vals, pv], axis=1)
-    return keys, vals, pad_base + r * extra
+    return keys, vals, pad_base + extra
 
 
 def _direct_sort(keys, vals, cfg, pad_base):
@@ -109,8 +150,8 @@ def _relocate_gather(tk, tv, starts, tile_off, totals, r, m, s_round, t, cap,
     tile starting at starts[r'*m + i, j].  Slot p of bucket row q
     therefore reads from the tile whose chunk covers p (binary search
     over the m chunk offsets), at chunk-relative position p - chunk
-    offset.  Slots past the true fill (p >= totals) become fresh unique
-    pads.
+    offset.  Slots past the true fill (p >= totals) become fresh pads,
+    unique within their bucket row.
     """
     # Per-bucket-row views: (r*s_round, m) chunk offsets / tile starts.
     offs = tile_off.transpose(0, 2, 1).reshape(r * s_round, m)
@@ -127,11 +168,7 @@ def _relocate_gather(tk, tv, starts, tile_off, totals, r, m, s_round, t, cap,
     src = jnp.where(valid, src, 0)
     gk = jnp.take(tk.reshape(-1), src.reshape(-1)).reshape(src.shape)
     gv = jnp.take(tv.reshape(-1), src.reshape(-1)).reshape(src.shape)
-    pad_v = (
-        jnp.int32(pad_base)
-        + jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 0) * cap
-        + jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 1)
-    )
+    pad_v = jnp.int32(pad_base) + p
     bk = jnp.where(valid, gk, _MAXU)
     bv = jnp.where(valid, gv, pad_v)
     return bk, bv
@@ -158,9 +195,12 @@ def _relocate_scatter(tk, tv, ranks, starts, tile_off, r, m, s_round, t, cap,
     # The capacity bound guarantees within < cap; tests assert no drops.
     dest = jnp.where(within < cap, dest, r * s_round * cap)
 
-    nbuf = r * s_round * cap
-    bk = jnp.full((nbuf,), _MAXU, jnp.uint32)
-    bv = jnp.int32(pad_base) + jax.lax.broadcasted_iota(jnp.int32, (nbuf,), 0)
+    # Unwritten slots hold the same per-row pads as the gather path.
+    bk = jnp.full((r * s_round, cap), _MAXU, jnp.uint32).reshape(-1)
+    bv = (
+        jnp.int32(pad_base)
+        + jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 1)
+    ).reshape(-1)
     bk = bk.at[dest.reshape(-1)].set(tk.reshape(-1), mode="drop")
     bv = bv.at[dest.reshape(-1)].set(tv.reshape(-1), mode="drop")
     return bk.reshape(r * s_round, cap), bv.reshape(r * s_round, cap)
@@ -202,7 +242,8 @@ def _sort_rows(keys, vals, cfg: SortConfig, pad_base: int, stats: list | None):
 
     Returns (sorted_keys, sorted_vals, pad_base) with dense sorted rows of
     the input shape.  Static recursion: every shape is trace-time known;
-    ``pad_base`` is a trace-time python int.
+    ``pad_base`` is a trace-time python int tracking the per-row pad
+    payload high-water mark (batch-size independent, DESIGN.md §5).
     """
     r, length = keys.shape
     if length <= cfg.direct_max:
@@ -280,12 +321,13 @@ def _sort_rows(keys, vals, cfg: SortConfig, pad_base: int, stats: list | None):
         bk, bv = _relocate_scatter(
             tk, tv, ranks, starts, tile_off, r, m, s_round, t, cap, pad_base
         )
-    pad_base += r * s_round * cap
+    pad_base += cap
 
     if stats is not None:
         stats.append(
             dict(
                 level_len=lp,
+                rows=r,
                 s_round=s_round,
                 capacity=cap,
                 totals=totals,
@@ -306,18 +348,67 @@ def _sort_rows(keys, vals, cfg: SortConfig, pad_base: int, stats: list | None):
     return ok[:, :length], ov[:, :length], pad_base
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "with_stats"))
-def _sort_canonical(keys_u32, cfg: SortConfig, with_stats: bool = False):
-    (n,) = keys_u32.shape
-    vals = jnp.arange(n, dtype=jnp.int32)
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "pad_base0", "with_stats")
+)
+def _sort_canonical_packed(keys_u32, vals, cfg: SortConfig, pad_base0: int,
+                           with_stats: bool = False):
+    """Row-native canonical entry: (B, L) uint32 keys + int32 payloads.
+
+    ``pad_base0`` must exceed every payload already present in ``vals``
+    (per row) so recursion-introduced pads sort after real elements.
+    """
     stats: list | None = [] if with_stats else None
-    sk, sv, pad_base = _sort_rows(keys_u32[None, :], vals[None, :], cfg, n, stats)
+    sk, sv, pad_base = _sort_rows(keys_u32, vals, cfg, pad_base0, stats)
     assert pad_base < _INT_MAX, (
-        f"pad payload budget exhausted ({pad_base}); reduce n or raise s/tile"
+        f"pad payload budget exhausted ({pad_base}); reduce L or raise s/tile"
     )
     if with_stats:
-        return sk[0], sv[0], stats
-    return sk[0], sv[0]
+        return sk, sv, stats
+    return sk, sv
+
+
+def _sort_canonical_rows(keys_u32, cfg: SortConfig, with_stats: bool = False):
+    """(B, L) canonical sort with payload = original index within the row."""
+    b, n = keys_u32.shape
+    vals = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
+    return _sort_canonical_packed(keys_u32, vals, cfg, n, with_stats)
+
+
+def _sort_canonical(keys_u32, cfg: SortConfig, with_stats: bool = False):
+    """1-D canonical entry (single logical row of the batched path)."""
+    out = _sort_canonical_rows(keys_u32[None, :], cfg, with_stats)
+    if with_stats:
+        return out[0][0], out[1][0], out[2]
+    return out[0][0], out[1][0]
+
+
+def _pad_rows(keys_u32, vals, cfg: SortConfig):
+    """Batch-aware block_rows auto-pick (DESIGN.md §5): on the pallas
+    path, pad the row count to a multiple of cfg.row_pad with all-pad
+    rows so ``auto_block_rows`` always finds a power-of-two divisor
+    >= row_pad and the row-blocked kernels get dense sublane blocks.
+    Returns (keys, vals, original_row_count); callers slice [:b] out.
+    """
+    b, length = keys_u32.shape
+    impl = cfg.impl or ops.default_impl()
+    if impl != "pallas" or cfg.row_pad <= 1 or b % cfg.row_pad == 0:
+        return keys_u32, vals, b
+    extra = round_up(b, cfg.row_pad) - b
+    pk = jnp.full((extra, length), _MAXU, jnp.uint32)
+    pv = jnp.broadcast_to(
+        jnp.arange(length, dtype=jnp.int32)[None, :], (extra, length)
+    )
+    return (
+        jnp.concatenate([keys_u32, pk], axis=0),
+        jnp.concatenate([vals, pv], axis=0),
+        b,
+    )
+
+
+# ----------------------------------------------------------------------
+# Public 1-D API
+# ----------------------------------------------------------------------
 
 
 def sort(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
@@ -350,7 +441,203 @@ def sort_kv(keys: jax.Array, values: jax.Array, cfg: SortConfig = DEFAULT_CONFIG
 
 
 def sort_with_stats(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
-    """Sort + per-round stats (capacities, bucket fills) for bound tests."""
+    """Sort + per-round stats (capacities, bucket fills) for bound tests.
+
+    Returns (sorted, perm, stats).  ``stats`` has one dict per bucket
+    round (keys: level_len, rows, s_round, capacity, totals,
+    max_within).  Inputs that fit ``cfg.direct_max`` take the
+    single-tile bitonic path and run ZERO bucket rounds: stats is a
+    well-defined EMPTY list — callers must check before indexing.
+    """
+    n = keys.shape[0]
+    if n <= 1:
+        return keys, jnp.arange(n, dtype=jnp.int32), []
     u = ops.to_sortable(keys)
     su, perm, stats = _sort_canonical(u, cfg, with_stats=True)
     return ops.from_sortable(su, keys.dtype), perm, stats
+
+
+# ----------------------------------------------------------------------
+# Batched API: B independent sorts on the rows of (B, L), one launch
+# ----------------------------------------------------------------------
+
+
+def _batched_entry(keys, cfg: SortConfig):
+    """Shared batched preamble: canonical keys, per-row index payloads,
+    row_pad alignment.  Returns (u, vals, b) — slice results [:b]."""
+    b, length = keys.shape
+    u, vals, _ = _pad_rows(
+        ops.to_sortable(keys),
+        jnp.broadcast_to(jnp.arange(length, dtype=jnp.int32)[None, :],
+                         (b, length)),
+        cfg,
+    )
+    return u, vals, b
+
+
+def sort_batched(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
+    """Sort each row of a (B, L) array independently (ascending, stable).
+
+    Equivalent to B independent 1-D ``sort`` calls, but the whole batch
+    enters the row-native pipeline with rows=B: one kernel launch per
+    pipeline step for the entire batch (DESIGN.md §5).
+    """
+    assert keys.ndim == 2, keys.shape
+    b, length = keys.shape
+    if b == 0 or length <= 1:
+        return keys
+    u, vals, b = _batched_entry(keys, cfg)
+    sk, _ = _sort_canonical_packed(u, vals, cfg, length)
+    return ops.from_sortable(sk[:b], keys.dtype)
+
+
+def argsort_batched(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
+    """Per-row stable argsort of (B, L): row i of the result is
+    ``np.argsort(keys[i], kind="stable")``."""
+    assert keys.ndim == 2, keys.shape
+    b, length = keys.shape
+    if b == 0 or length <= 1:
+        return jnp.broadcast_to(
+            jnp.arange(length, dtype=jnp.int32)[None, :], (b, length)
+        )
+    u, vals, b = _batched_entry(keys, cfg)
+    _, perm = _sort_canonical_packed(u, vals, cfg, length)
+    return perm[:b]
+
+
+def sort_kv_batched(keys: jax.Array, values: jax.Array,
+                    cfg: SortConfig = DEFAULT_CONFIG):
+    """Per-row stable (keys, values) sort of (B, L) keys by keys.
+
+    values: (B, L, ...) — any trailing shape; permuted along axis 1 with
+    each row's permutation.
+    """
+    assert keys.ndim == 2 and values.shape[:2] == keys.shape, (
+        keys.shape, values.shape
+    )
+    b, length = keys.shape
+    if b == 0 or length <= 1:
+        return keys, values
+    u, vals, b = _batched_entry(keys, cfg)
+    sk, perm = _sort_canonical_packed(u, vals, cfg, length)
+    sk, perm = sk[:b], perm[:b]
+    idx = perm.reshape(perm.shape + (1,) * (values.ndim - 2))
+    sv = jnp.take_along_axis(values, idx, axis=1)
+    return ops.from_sortable(sk, keys.dtype), sv
+
+
+def sort_batched_with_stats(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
+    """Batched sort + per-round stats over the WHOLE batch.
+
+    Each stats entry's ``totals`` covers every row of that recursion
+    level (top level: the B batch rows, plus all-pad alignment rows on
+    the pallas path — pads obey the same bound).  Like
+    ``sort_with_stats``, stats is [] when L fits ``cfg.direct_max``.
+    """
+    assert keys.ndim == 2, keys.shape
+    b, length = keys.shape
+    if b == 0 or length <= 1:
+        perm = jnp.broadcast_to(
+            jnp.arange(length, dtype=jnp.int32)[None, :], (b, length)
+        )
+        return keys, perm, []
+    u, vals, b = _batched_entry(keys, cfg)
+    sk, perm, stats = _sort_canonical_packed(
+        u, vals, cfg, length, with_stats=True
+    )
+    return ops.from_sortable(sk[:b], keys.dtype), perm[:b], stats
+
+
+# ----------------------------------------------------------------------
+# Segmented API: ragged independent sorts, packed into padded rows
+# ----------------------------------------------------------------------
+
+
+def _segment_layout(n: int, segment_offsets):
+    """Host-side (trace-time) packing layout for ragged segments.
+
+    segment_offsets: host-known non-decreasing ints, off[0] == 0 and
+    off[-1] == n (a traced array raises — static shapes require the
+    segmentation to be known at trace time).
+
+    Returns (off, lens, W, valid, src, unpack_src, seg_of_pos) — all
+    numpy; W is the padded row width (max segment length).
+    """
+    off = np.asarray(segment_offsets)
+    assert off.ndim == 1 and off.size >= 1, (
+        "segment_offsets must be a 1-D sequence [0, ..., n]"
+    )
+    off = off.astype(np.int64)
+    lens = np.diff(off)
+    assert off[0] == 0 and off[-1] == n and (lens >= 0).all(), (
+        "segment_offsets must be non-decreasing with off[0]=0, off[-1]=n"
+    )
+    w = int(lens.max()) if lens.size else 0
+    col = np.arange(max(w, 1))
+    valid = col[None, :] < lens[:, None]  # (S, W)
+    src = np.where(valid, off[:-1, None] + col[None, :], 0).astype(np.int32)
+    pos = np.arange(n)
+    seg_of_pos = np.searchsorted(off, pos, side="right") - 1  # skips empties
+    unpack_src = (seg_of_pos * max(w, 1) + (pos - off[seg_of_pos])).astype(
+        np.int32
+    )
+    return off, lens, w, valid, src, unpack_src, seg_of_pos
+
+
+def _segment_sorted_packed(x: jax.Array, segment_offsets, cfg: SortConfig):
+    """Shared segment pipeline: pack ragged segments of 1-D x into a
+    padded (S, W) batch (scatter-free gather), run the row-native sort,
+    and return (sorted_keys (S, W), local_perm (S, W), layout).
+
+    Packing rule (DESIGN.md §5): row i holds segment i left-justified;
+    columns past the segment length hold (MAXU, W + j) pads — unique
+    per row, above every real payload (local indices < W), so they sort
+    last and the per-row capacity bound is untouched.
+    """
+    n = x.shape[0]
+    layout = _segment_layout(n, segment_offsets)
+    _, _, w, valid, src, _, _ = layout
+    u = ops.to_sortable(x)
+    validj = jnp.asarray(valid)
+    col = jnp.asarray(np.arange(max(w, 1)), jnp.int32)[None, :]
+    pk = jnp.where(validj, u[jnp.asarray(src)], _MAXU)
+    pv = jnp.where(validj, col, jnp.int32(w) + col)
+    pk, pv, s_orig = _pad_rows(pk, pv, cfg)
+    sk, sv = _sort_canonical_packed(pk, pv, cfg, 2 * max(w, 1))
+    return sk[:s_orig], sv[:s_orig], layout
+
+
+def segment_sort(x: jax.Array, segment_offsets,
+                 cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
+    """Sort each segment x[off[i]:off[i+1]] independently, in place.
+
+    segment_offsets must be host-known (python ints / numpy / concrete
+    array): the padded row width is a static shape.  Empty segments are
+    fine.  One launch for all segments; no element crosses a segment
+    boundary (tested).  Returns an array of x's shape.
+    """
+    assert x.ndim == 1, x.shape
+    n = x.shape[0]
+    if n == 0:
+        _segment_layout(n, segment_offsets)  # still validate offsets
+        return x
+    sk, _, layout = _segment_sorted_packed(x, segment_offsets, cfg)
+    unpack_src = layout[5]
+    out_u = jnp.take(sk.reshape(-1), jnp.asarray(unpack_src))
+    return ops.from_sortable(out_u, x.dtype)
+
+
+def segment_argsort(x: jax.Array, segment_offsets,
+                    cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
+    """Per-segment stable argsort with GLOBAL indices: out[off[i]:off[i+1]]
+    is a permutation of [off[i], off[i+1]) and x[out] == segment_sort(x).
+    """
+    assert x.ndim == 1, x.shape
+    n = x.shape[0]
+    if n == 0:
+        _segment_layout(n, segment_offsets)
+        return jnp.arange(0, dtype=jnp.int32)
+    _, sv, layout = _segment_sorted_packed(x, segment_offsets, cfg)
+    off, _, _, _, _, unpack_src, seg_of_pos = layout
+    local = jnp.take(sv.reshape(-1), jnp.asarray(unpack_src))
+    return jnp.asarray(off[seg_of_pos].astype(np.int32)) + local

@@ -12,6 +12,12 @@ Work: O(n) tile sort + O((k+B) log(k+B))  vs  O(n log n) full sort.
 Everything here operates on "smallest-k of canonical uint32 keys";
 ``topk`` feeds inverted keys so ties break toward the smaller index,
 matching jax.lax.top_k.
+
+``topk_batched`` runs the same partial round on every row of a
+serving-shaped (B, vocab) batch in ONE launch (DESIGN.md §5): tiles of
+all rows sort together, splitters/thresholds are per row, and the
+candidate pack is a scatter-free gather (binary search over the per-row
+tile candidate-count prefix sums, like the step-8 relocation).
 """
 
 from __future__ import annotations
@@ -21,6 +27,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.bucket_sort import _chunk_search
 from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, next_pow2, round_up
 from repro.kernels import ops
 
@@ -124,4 +131,115 @@ def topk(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
         fk, fv = fk[:k], fv[:k]
     else:
         fk, fv = _smallest_k(u, k, cfg)
+    return ops.from_sortable(~fk, x.dtype), fv
+
+
+# ----------------------------------------------------------------------
+# Batched partial sort: top-k of every row of (B, vocab) in one launch
+# ----------------------------------------------------------------------
+
+
+def _sort_small_rows(k2, v2, cfg):
+    """Bitonic sort of each row of (r, L) (pads with (MAXU, IMAX) last)."""
+    n = k2.shape[1]
+    sk, sv = ops.sort_tiles(
+        *_pad_pow2(k2, v2), impl=cfg.impl, interpret=cfg.interpret,
+        block_rows=cfg.block_rows,
+    )
+    return sk[:, :n], sv[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg"))
+def _smallest_k_rows(u, k: int, cfg: SortConfig):
+    """Per-row ascending smallest-k of (B, n) canonical keys; payload =
+    original column index.  One bucket round for the whole batch; the
+    threshold θ and candidate set are per row."""
+    b, n = u.shape
+    t, s = cfg.tile, cfg.s
+    lp = round_up(n, t)
+    vals = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
+    if lp > n:  # pad with MAX pairs: never candidates for smallest-k
+        u = jnp.concatenate(
+            [u, jnp.full((b, lp - n), _MAXU, jnp.uint32)], axis=1
+        )
+        vals = jnp.concatenate(
+            [vals, jnp.full((b, lp - n), _IMAX, jnp.int32)], axis=1
+        )
+    m = lp // t
+
+    # steps 1-2: tile sort, all rows' tiles in one launch
+    tk, tv = ops.sort_tiles(
+        u.reshape(b * m, t), vals.reshape(b * m, t),
+        impl=cfg.impl, interpret=cfg.interpret, block_rows=cfg.block_rows,
+    )
+
+    # steps 3-5: per-row samples -> sorted sample rows -> s-1 splitters
+    samp_idx = (jnp.arange(1, s + 1, dtype=jnp.int32) * (t // s)) - 1
+    ssk, ssv = _sort_small_rows(
+        tk[:, samp_idx].reshape(b, m * s), tv[:, samp_idx].reshape(b, m * s),
+        cfg,
+    )
+    sp_idx = (jnp.arange(1, s, dtype=jnp.int32) * (m * s)) // s
+    spk_t = jnp.repeat(ssk[:, sp_idx], m, axis=0)  # (b*m, s-1)
+    spv_t = jnp.repeat(ssv[:, sp_idx], m, axis=0)
+
+    # step 6: ranks, reduced per row
+    ranks = ops.splitter_ranks(
+        tk, tv, spk_t, spv_t, impl=cfg.impl, interpret=cfg.interpret
+    ).reshape(b, m, s - 1)
+    glob_ranks = ranks.sum(axis=1)  # (b, s-1)
+
+    # Per-row θ: smallest splitter with global rank >= k (see _smallest_k
+    # for why ccap always covers the candidate count).
+    cap = round_up(2 * lp // s, 128)
+    ccap = round_up(min(k + cap, lp), 128)
+    qualifies = glob_ranks >= k  # (b, s-1), monotone per row
+    any_q = jnp.any(qualifies, axis=1)  # (b,)
+    theta = jnp.argmax(qualifies, axis=1).astype(jnp.int32)  # (b,)
+    tile_rank = jnp.where(
+        any_q[:, None],
+        jnp.take_along_axis(ranks, theta[:, None, None], axis=2)[:, :, 0],
+        jnp.full((b, m), t, jnp.int32),
+    )  # (b, m) elements of each tile below the row's θ (or all)
+
+    # Scatter-free candidate pack: slot p of row q reads the tile whose
+    # candidate-count prefix interval covers p, at its first tile_rank
+    # positions (the candidates are a sorted tile's prefix).
+    tile_excl = jnp.cumsum(tile_rank, axis=1) - tile_rank  # (b, m) excl.
+    total = tile_rank.sum(axis=1)  # (b,)
+    p = jax.lax.broadcasted_iota(jnp.int32, (b, ccap), 1)
+    src_tile = _chunk_search(tile_excl, p)  # (b, ccap)
+    src_off = jnp.take_along_axis(tile_excl, src_tile, axis=1)
+    row_base = jax.lax.broadcasted_iota(jnp.int32, (b, ccap), 0) * m
+    src = (row_base + src_tile) * t + (p - src_off)
+    valid = p < total[:, None]
+    src = jnp.where(valid, src, 0)
+    ck = jnp.where(valid, jnp.take(tk.reshape(-1), src.reshape(-1)
+                                   ).reshape(b, ccap), _MAXU)
+    cv = jnp.where(valid, jnp.take(tv.reshape(-1), src.reshape(-1)
+                                   ).reshape(b, ccap), _IMAX)
+
+    fk, fv = _sort_small_rows(ck, cv, cfg)
+    return fk[:, :k], fv[:, :k]
+
+
+def topk_batched(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
+    """Top-k (descending) values + column indices of every row of (B, C).
+
+    Equivalent to ``jax.lax.top_k(x, k)`` (ties toward the smaller
+    index) but via the partial deterministic sample sort, one launch for
+    the whole batch — the serving shape: (batch, vocab) logits.
+    """
+    assert x.ndim == 2, x.shape
+    b, n = x.shape
+    assert 1 <= k <= n
+    if b == 0:
+        return (jnp.zeros((0, k), x.dtype), jnp.zeros((0, k), jnp.int32))
+    u = ~ops.to_sortable(x)  # ascending u == descending x
+    if n <= cfg.direct_max:
+        vals = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
+        fk, fv = _sort_small_rows(u, vals, cfg)
+        fk, fv = fk[:, :k], fv[:, :k]
+    else:
+        fk, fv = _smallest_k_rows(u, k, cfg)
     return ops.from_sortable(~fk, x.dtype), fv

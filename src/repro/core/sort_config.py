@@ -44,6 +44,15 @@ class SortConfig:
         scatters anywhere on the hot path (DESIGN.md §4).  "scatter" is
         the legacy destination-scatter formulation, kept as a reference
         for tests and benchmarks.
+    row_pad: batch-aware block_rows auto-pick (DESIGN.md §5).  The
+        batched entry points (``sort_batched``, ``segment_sort``) pad
+        the row count up to a multiple of this power of two before
+        entering the row-blocked kernels, so ``auto_block_rows`` always
+        finds a divisor >= row_pad and every compare-exchange runs as a
+        dense (>= 8-sublane) vector op even for odd batch sizes.  Only
+        applied on the pallas path (it is pure overhead for the xla
+        reference path); 1 disables.  Pad rows are all-pad (MAXU keys),
+        obey the same capacity bound, and are sliced off on exit.
     """
 
     tile: int = 4096
@@ -55,6 +64,7 @@ class SortConfig:
     fuse_sampling: bool = True
     fuse_ranking: bool = True
     relocation: str = "gather"
+    row_pad: int = 8
 
     def __post_init__(self):
         assert self.tile >= 2 and self.tile & (self.tile - 1) == 0, self.tile
@@ -68,6 +78,9 @@ class SortConfig:
                 and self.block_rows & (self.block_rows - 1) == 0
             ), self.block_rows
         assert self.relocation in ("gather", "scatter"), self.relocation
+        assert (
+            self.row_pad >= 1 and self.row_pad & (self.row_pad - 1) == 0
+        ), self.row_pad
 
 
 # Paper default: s = 64 (Fig. 3 sweep), 2K-item tiles on 16KB shared memory.

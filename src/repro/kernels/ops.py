@@ -155,15 +155,26 @@ def topk(
     impl: str | None = None,
     interpret: bool | None = None,
 ):
-    """Row-wise top-k (descending) of (R, C) scores; C a power of two.
+    """Row-wise top-k (descending) of (R, C) scores.
 
     Returns (values (R, k) in x.dtype, indices (R, k) int32); ties toward
-    the smaller index, matching jax.lax.top_k.
+    the smaller index, matching jax.lax.top_k.  Non-power-of-two C
+    (real vocab sizes: 50257, 151936, ...) is padded up with worst-score
+    columns, which can never enter the top-k since k <= C.
     """
     impl = impl or default_impl()
     orig_dtype = x.dtype
     u = ~to_sortable(x)  # ascending canonical == descending score
     r, c = u.shape
+    assert 1 <= k <= c, (k, c)
+    cp = 1
+    while cp < c:
+        cp *= 2
+    if cp > c:  # inverted domain: MAXU == the worst possible score
+        u = jnp.concatenate(
+            [u, jnp.full((r, cp - c), jnp.uint32(0xFFFFFFFF))], axis=1
+        )
+        c = cp
     if impl == "pallas":
         interpret = default_interpret() if interpret is None else interpret
         block_rows = _bitonic.largest_pow2_divisor(r, 256)

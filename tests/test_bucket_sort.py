@@ -104,3 +104,51 @@ def test_deterministic_across_runs(rng):
     p1 = np.asarray(bucket_sort.argsort(x, CFG))
     p2 = np.asarray(bucket_sort.argsort(x, CFG))
     np.testing.assert_array_equal(p1, p2)
+
+
+def test_sort_with_stats_direct_path_returns_empty_stats(rng):
+    """Inputs within direct_max run zero bucket rounds: stats must be a
+    well-defined EMPTY list (not an error), sort/perm still correct."""
+    x = rng.integers(0, 100, CFG.direct_max).astype(np.int32)
+    srt, perm, stats = bucket_sort.sort_with_stats(jnp.asarray(x), CFG)
+    assert stats == []
+    np.testing.assert_array_equal(np.asarray(srt), np.sort(x))
+    np.testing.assert_array_equal(np.asarray(perm), np.argsort(x, kind="stable"))
+    # trivial inputs too
+    for n in (0, 1):
+        srt, perm, stats = bucket_sort.sort_with_stats(
+            jnp.asarray(x[:n]), CFG
+        )
+        assert stats == [] and srt.shape == (n,) and perm.shape == (n,)
+    # and the batched variant
+    xb = rng.integers(0, 100, (3, CFG.direct_max // 2)).astype(np.int32)
+    srt, perm, stats = bucket_sort.sort_batched_with_stats(jnp.asarray(xb), CFG)
+    assert stats == []
+    np.testing.assert_array_equal(np.asarray(srt), np.sort(xb, axis=1))
+
+
+def test_batched_stats_bucket_bound_adversarial_rows(rng):
+    """The capacity bound holds PER ROW: an all-duplicates row next to a
+    uniform row (plus sorted/reverse/zipf rows) must keep every round's
+    max bucket fill <= capacity, for every bucket of every row."""
+    n = 4 * CFG.direct_max
+    rows = np.stack([
+        np.full(n, 42, np.int32),  # all-dup: worst case for splitters
+        rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32),  # uniform
+        np.sort(rng.integers(0, 1000, n).astype(np.int32)),  # presorted
+        np.sort(rng.integers(0, 1000, n).astype(np.int32))[::-1],  # reverse
+        (rng.zipf(1.3, n) % 100000).astype(np.int32),  # heavy skew
+    ])
+    srt, perm, stats = bucket_sort.sort_batched_with_stats(
+        jnp.asarray(rows), CFG
+    )
+    assert len(stats) >= 1
+    for stt in stats:
+        totals = np.asarray(stt["totals"])  # (rows_at_level, s_round)
+        assert totals.min() >= 0
+        assert totals.max() <= stt["capacity"], (totals.max(), stt["capacity"])
+        assert int(np.asarray(stt["max_within"])) < stt["capacity"]
+    np.testing.assert_array_equal(np.asarray(srt), np.sort(rows, axis=1))
+    np.testing.assert_array_equal(
+        np.asarray(perm), np.argsort(rows, axis=1, kind="stable")
+    )

@@ -1,0 +1,180 @@
+"""Differential conformance suite: one parametrized harness asserting
+every public sort API agrees with the jnp oracles (jnp.sort /
+jnp.argsort / jax.lax.top_k) across
+
+  * dtypes: int32 / uint32 / float32 incl. NaN, +/-inf, -0.0;
+  * sizes crossing every cell's ``direct_max`` and tile boundaries;
+  * both relocation paths (scatter-free gather + legacy scatter);
+  * impl="xla" and interpreted Pallas.
+
+No xfails anywhere: every (api, dtype, impl, relocation) cell must pass.
+
+Float caveats, pinned down so the oracle comparison is EXACT:
+  * Our total order ranks sign-bit ("negative") NaNs first; jnp.sort
+    follows numpy and puts ALL NaNs last.  Inputs here use np.nan — a
+    positive quiet NaN — whose single bit pattern both orders place
+    last, stably by index.
+  * Our total order ranks -0.0 < +0.0 strictly; numpy/jnp treat them as
+    equal (stable) keys.  Value comparisons are unaffected
+    (assert_array_equal treats -0.0 == +0.0), so ``sort`` inputs
+    include -0.0; exact PERMUTATION comparisons (argsort) drop it.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bucket_sort, partial_sort
+from repro.core.sort_config import SortConfig
+
+_XLA = SortConfig(tile=256, s=16, direct_max=512, impl="xla")
+_PAL = SortConfig(tile=128, s=8, direct_max=256, impl="pallas", interpret=True)
+
+CELLS = [
+    pytest.param(_XLA, id="xla-gather"),
+    pytest.param(dataclasses.replace(_XLA, relocation="scatter"),
+                 id="xla-scatter"),
+    pytest.param(_PAL, id="pallas-gather"),
+    pytest.param(dataclasses.replace(_PAL, relocation="scatter"),
+                 id="pallas-scatter"),
+]
+
+# Crosses both cells' tile (128/256) and direct_max (256/512) boundaries.
+SIZES = [1, 5, 127, 128, 255, 256, 511, 512, 513, 1500]
+
+DTYPES = ["int32", "uint32", "float32"]
+
+
+def make_keys(dtype, n, rng, *, signed_zero=True):
+    """Adversarial-ish keys: full-range ints / floats spiked with the
+    special values (NaN always np.nan — see module docstring)."""
+    if dtype == "int32":
+        return rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32)
+    if dtype == "uint32":
+        return rng.integers(0, 2**32, n, dtype=np.uint64).astype(np.uint32)
+    x = (rng.normal(size=n) * rng.choice([1e-30, 1.0, 1e30], n)).astype(
+        np.float32
+    )
+    specials = [np.nan, np.inf, -np.inf, 0.0] + ([-0.0] if signed_zero else [])
+    idx = rng.integers(0, n, min(n, 25))
+    x[idx] = np.asarray(specials, np.float32)[
+        rng.integers(0, len(specials), len(idx))
+    ]
+    return x
+
+
+@pytest.mark.parametrize("cfg", CELLS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", SIZES)
+def test_sort_matches_jnp(rng, cfg, dtype, n):
+    x = make_keys(dtype, n, rng)
+    got = np.asarray(bucket_sort.sort(jnp.asarray(x), cfg))
+    want = np.asarray(jnp.sort(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("cfg", CELLS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", SIZES)
+def test_argsort_matches_jnp(rng, cfg, dtype, n):
+    x = make_keys(dtype, n, rng, signed_zero=False)
+    got = np.asarray(bucket_sort.argsort(jnp.asarray(x), cfg))
+    want = np.asarray(jnp.argsort(jnp.asarray(x), stable=True))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("cfg", CELLS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sort_kv_matches_jnp_permutation(rng, cfg, dtype):
+    n = 700  # crosses both cells' direct_max
+    x = make_keys(dtype, n, rng, signed_zero=False)
+    vals = rng.normal(size=(n, 3)).astype(np.float32)
+    sk, sv = bucket_sort.sort_kv(jnp.asarray(x), jnp.asarray(vals), cfg)
+    perm = np.asarray(jnp.argsort(jnp.asarray(x), stable=True))
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(jnp.sort(jnp.asarray(x))))
+    np.testing.assert_array_equal(np.asarray(sv), vals[perm])
+
+
+@pytest.mark.parametrize("cfg", CELLS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("length", [40, 700])  # direct path + bucket round
+def test_batched_matches_jnp_rows(rng, cfg, dtype, length):
+    b = 5  # odd batch: exercises the row_pad path on pallas cells
+    x = np.stack([make_keys(dtype, length, rng, signed_zero=False)
+                  for _ in range(b)])
+    xj = jnp.asarray(x)
+    got = np.asarray(bucket_sort.sort_batched(xj, cfg))
+    np.testing.assert_array_equal(got, np.asarray(jnp.sort(xj, axis=-1)))
+    gotp = np.asarray(bucket_sort.argsort_batched(xj, cfg))
+    np.testing.assert_array_equal(
+        gotp, np.asarray(jnp.argsort(xj, axis=-1, stable=True))
+    )
+
+
+@pytest.mark.parametrize("cfg", CELLS)
+def test_sort_kv_batched_matches_jnp_rows(rng, cfg):
+    b, length = 4, 700
+    x = rng.integers(0, 50, (b, length)).astype(np.int32)  # heavy ties
+    vals = rng.normal(size=(b, length, 2)).astype(np.float32)
+    sk, sv = bucket_sort.sort_kv_batched(
+        jnp.asarray(x), jnp.asarray(vals), cfg
+    )
+    perm = np.argsort(x, axis=-1, kind="stable")
+    np.testing.assert_array_equal(np.asarray(sk), np.sort(x, axis=-1))
+    np.testing.assert_array_equal(
+        np.asarray(sv), np.take_along_axis(vals, perm[:, :, None], axis=1)
+    )
+
+
+@pytest.mark.parametrize("cfg", CELLS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_segmented_matches_jnp_per_segment(rng, cfg, dtype):
+    n = 1200
+    x = make_keys(dtype, n, rng, signed_zero=False)
+    # empty, single-element, and > direct_max segments
+    off = [0, 0, 1, 5, 600, 600, 900, n]
+    xj = jnp.asarray(x)
+    got = np.asarray(bucket_sort.segment_sort(xj, off, cfg))
+    gotp = np.asarray(bucket_sort.segment_argsort(xj, off, cfg))
+    for lo, hi in zip(off, off[1:]):
+        seg = jnp.asarray(x[lo:hi])
+        np.testing.assert_array_equal(got[lo:hi], np.asarray(jnp.sort(seg)))
+        np.testing.assert_array_equal(
+            gotp[lo:hi], lo + np.asarray(jnp.argsort(seg, stable=True))
+        )
+
+
+@pytest.mark.parametrize("cfg", CELLS)
+@pytest.mark.parametrize("dtype", ["int32", "float32"])
+@pytest.mark.parametrize("n", [300, 1500])  # direct path + partial round
+def test_topk_matches_lax(rng, cfg, dtype, n):
+    k = 16
+    if dtype == "int32":
+        x = rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32)
+    else:
+        x = rng.normal(size=n).astype(np.float32)
+        x[rng.integers(0, n, 5)] = np.asarray(
+            [np.inf, -np.inf, 0.0, 1.0, -1.0], np.float32
+        )
+    tv, ti = partial_sort.topk(jnp.asarray(x), k, cfg)
+    lv, li = jax.lax.top_k(jnp.asarray(x), k)
+    np.testing.assert_array_equal(np.asarray(tv), np.asarray(lv))
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(li))
+
+
+@pytest.mark.parametrize("cfg", CELLS)
+@pytest.mark.parametrize("dtype", ["int32", "float32"])
+@pytest.mark.parametrize("n", [300, 1500])  # direct path + partial round
+def test_topk_batched_matches_lax(rng, cfg, dtype, n):
+    b, k = 5, 16
+    if dtype == "int32":
+        x = rng.integers(0, 40, (b, n)).astype(np.int32)  # heavy ties
+    else:
+        x = rng.normal(size=(b, n)).astype(np.float32)
+    tv, ti = partial_sort.topk_batched(jnp.asarray(x), k, cfg)
+    lv, li = jax.lax.top_k(jnp.asarray(x), k)
+    np.testing.assert_array_equal(np.asarray(tv), np.asarray(lv))
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(li))

@@ -5,6 +5,9 @@
   * the paper's guaranteed bucket bound: every round's max bucket fill
     <= capacity and the relocation scatter never drops an element
   * partial top-k == lax.top_k for arbitrary inputs
+  * batched sort of B rows == B independent 1-D sorts (DESIGN.md §5)
+  * segmented sort never leaks an element across a segment boundary,
+    and stability holds per segment
 """
 
 import jax
@@ -90,3 +93,68 @@ def test_partial_topk_matches_lax(xs, k):
     lv, li = jax.lax.top_k(jnp.asarray(x), k)
     np.testing.assert_array_equal(np.asarray(ti), np.asarray(li))
     np.testing.assert_array_equal(np.asarray(tv), np.asarray(lv))
+
+
+# ----------------------------------------------------------------------
+# Batched & segmented layer (DESIGN.md §5)
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(st.integers(min_value=-(2**31), max_value=2**31 - 1),
+             min_size=1, max_size=800),
+    st.integers(min_value=1, max_value=5),
+)
+def test_batched_sort_equals_independent_sorts(xs, b):
+    """sort_batched of B rows == B independent 1-D sorts, bit for bit
+    (values AND stable permutations)."""
+    row = np.asarray(xs, np.int32)
+    x = np.stack([np.roll(row, 13 * i) for i in range(b)])  # distinct rows
+    got = np.asarray(bucket_sort.sort_batched(jnp.asarray(x), CFG))
+    gotp = np.asarray(bucket_sort.argsort_batched(jnp.asarray(x), CFG))
+    for i in range(b):
+        np.testing.assert_array_equal(
+            got[i], np.asarray(bucket_sort.sort(jnp.asarray(x[i]), CFG))
+        )
+        np.testing.assert_array_equal(
+            gotp[i], np.asarray(bucket_sort.argsort(jnp.asarray(x[i]), CFG))
+        )
+
+
+def _offsets_from_cuts(n, cuts):
+    return np.asarray([0] + sorted(c % (n + 1) for c in cuts) + [n], np.int64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(st.integers(min_value=-(2**31), max_value=2**31 - 1),
+             min_size=1, max_size=800),
+    st.lists(st.integers(min_value=0, max_value=2**31 - 1), max_size=6),
+)
+def test_segment_sort_never_leaks_across_boundaries(xs, cuts):
+    """Every segment of the output is a sorted PERMUTATION OF THE SAME
+    SEGMENT of the input — no element crosses a boundary (empty and
+    duplicate offsets included)."""
+    x = np.asarray(xs, np.int32)
+    off = _offsets_from_cuts(len(x), cuts)
+    got = np.asarray(bucket_sort.segment_sort(jnp.asarray(x), off, CFG))
+    for lo, hi in zip(off, off[1:]):
+        np.testing.assert_array_equal(got[lo:hi], np.sort(x[lo:hi]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(st.integers(min_value=0, max_value=3), min_size=1, max_size=800),
+    st.lists(st.integers(min_value=0, max_value=2**31 - 1), max_size=6),
+)
+def test_segment_argsort_stable_per_segment(xs, cuts):
+    """Heavy duplicates: the per-segment permutation must equal numpy's
+    stable argsort of that segment (global indices)."""
+    x = np.asarray(xs, np.int32)
+    off = _offsets_from_cuts(len(x), cuts)
+    perm = np.asarray(bucket_sort.segment_argsort(jnp.asarray(x), off, CFG))
+    for lo, hi in zip(off, off[1:]):
+        np.testing.assert_array_equal(
+            perm[lo:hi], lo + np.argsort(x[lo:hi], kind="stable")
+        )
