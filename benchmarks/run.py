@@ -45,6 +45,7 @@ def main() -> None:
     from benchmarks import (
         batched_segmented,
         distribution_robustness,
+        dtypes_throughput,
         moe_dispatch,
         sample_size_sweep,
         sort_throughput,
@@ -67,6 +68,8 @@ def main() -> None:
             tokens=4096 if quick else 16384),
         "topk_partial": lambda: topk_partial.run(
             vocab=65536 if quick else 151936),
+        "dtypes": lambda: dtypes_throughput.run(
+            n=131072 if quick else 1048576),
         "batched": lambda: batched_segmented.run_batched(
             b=64 if quick else 256, l=2048),
         "segmented": lambda: batched_segmented.run_segmented(

@@ -52,11 +52,13 @@ def run(n=1048576, repeats=3, pallas_compare=True):
 
     @jax.jit
     def sample_sort(sampk, sampv):
-        ssk, ssv, _ = bs._sort_rows(
-            sampk.reshape(1, m * sper), sampv.reshape(1, m * sper),
+        # internal canonical entries take tuples of key words (one word
+        # for int32 keys); unwrap on the way out
+        skw, ssv, _ = bs._sort_rows(
+            (sampk.reshape(1, m * sper),), sampv.reshape(1, m * sper),
             CFG, 2 * lp, None,
         )
-        return ssk, ssv
+        return skw[0], ssv
 
     ssk, ssv = jax.block_until_ready(sample_sort(sampk, sampv))
 
@@ -75,7 +77,7 @@ def run(n=1048576, repeats=3, pallas_compare=True):
 
     @jax.jit
     def full(u):
-        return bs._sort_canonical(u, CFG)
+        return bs._sort_canonical((u,), CFG)
 
     rows = []
     t_local = timeit(local_sort, u, repeats=repeats)
@@ -106,23 +108,27 @@ def run(n=1048576, repeats=3, pallas_compare=True):
 
     @jax.jit
     def reloc_scatter(tk, tv, ranks, starts, tile_off):
-        return bs._relocate_scatter(
-            tk, tv, ranks, starts, tile_off, r, m, s_round, t, cap, 2 * lp)
+        bkw, bv = bs._relocate_scatter(
+            (tk,), tv, ranks, starts, tile_off, r, m, s_round, t, cap, 2 * lp)
+        return bkw[0], bv
 
     @jax.jit
     def reloc_gather(tk, tv, starts, tile_off, totals):
-        return bs._relocate_gather(
-            tk, tv, starts, tile_off, totals, r, m, s_round, t, cap, 2 * lp)
+        bkw, bv = bs._relocate_gather(
+            (tk,), tv, starts, tile_off, totals, r, m, s_round, t, cap, 2 * lp)
+        return bkw[0], bv
 
     bk, bv = jax.block_until_ready(reloc_gather(tk, tv, starts, tile_off, totals))
 
     @jax.jit
     def compact_scatter(bk, bv, totals):
-        return bs._compact_scatter(bk, bv, totals, r, s_round, cap, lp)
+        okw, ov = bs._compact_scatter((bk,), bv, totals, r, s_round, cap, lp)
+        return okw[0], ov
 
     @jax.jit
     def compact_gather(bk, bv, totals):
-        return bs._compact_gather(bk, bv, totals, r, s_round, cap, lp)
+        okw, ov = bs._compact_gather((bk,), bv, totals, r, s_round, cap, lp)
+        return okw[0], ov
 
     t_rel_sc = timeit(reloc_scatter, tk, tv, ranks, starts, tile_off,
                       repeats=repeats)

@@ -20,6 +20,7 @@ import json
 import os
 import shutil
 import threading
+import time
 
 import jax
 import numpy as np
@@ -37,12 +38,17 @@ def _flatten(tree):
 
 
 def save(path: str, step: int, tree) -> str:
-    """Blocking atomic save.  Returns the final directory."""
+    """Blocking atomic save.  Returns the final directory.
+
+    The staging directory is unique per attempt (pid + thread id), so
+    two concurrent saves of the same step — e.g. an abandoned async
+    writer racing a post-restart re-save — never touch each other's
+    files; the loser of the final rename discards its staging dir.
+    """
     flat, _ = _flatten(tree)
     final = os.path.join(path, f"step_{step:08d}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+    tmp = f"{final}.tmp.{os.getpid()}.{threading.get_ident()}"
+    shutil.rmtree(tmp, ignore_errors=True)
     os.makedirs(tmp, exist_ok=True)
     manifest = {"step": step, "keys": [], "dtypes": {}, "shapes": {}}
     for key, leaf in flat.items():
@@ -55,8 +61,15 @@ def save(path: str, step: int, tree) -> str:
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+        shutil.rmtree(final, ignore_errors=True)
+    try:
+        os.rename(tmp, final)
+    except OSError:
+        if not os.path.exists(os.path.join(final, "manifest.json")):
+            raise  # a real failure, not a concurrent publish
+        # Lost the publish race to a concurrent save of the same step
+        # (same state: steps are deterministic); keep the winner's copy.
+        shutil.rmtree(tmp, ignore_errors=True)
     return final
 
 
@@ -66,7 +79,7 @@ def latest_step(path: str) -> int | None:
         return None
     steps = []
     for name in os.listdir(path):
-        if name.startswith("step_") and not name.endswith(".tmp"):
+        if name.startswith("step_") and ".tmp" not in name:
             if os.path.exists(os.path.join(path, name, "manifest.json")):
                 steps.append(int(name[5:]))
     return max(steps) if steps else None
@@ -96,16 +109,28 @@ def restore(path: str, step: int, like, shardings=None):
     return jax.tree_util.tree_unflatten(treedef, vals)
 
 
-def gc_keep_k(path: str, keep: int):
+def gc_keep_k(path: str, keep: int, stale_tmp_secs: float = 3600.0):
+    """Keep the newest ``keep`` complete checkpoints; also sweep staging
+    dirs (``step_*.tmp.*``) untouched for ``stale_tmp_secs`` — orphans
+    of crashed writers, whose pid-unique names nothing else reclaims."""
     if not os.path.isdir(path):
         return
     steps = sorted(
         int(n[5:]) for n in os.listdir(path)
-        if n.startswith("step_") and not n.endswith(".tmp")
+        if n.startswith("step_") and ".tmp" not in n
         and os.path.exists(os.path.join(path, n, "manifest.json"))
     )
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(path, f"step_{s:08d}"), ignore_errors=True)
+    now = time.time()
+    for n in os.listdir(path):
+        if n.startswith("step_") and ".tmp" in n:
+            p = os.path.join(path, n)
+            try:
+                if now - os.path.getmtime(p) > stale_tmp_secs:
+                    shutil.rmtree(p, ignore_errors=True)
+            except OSError:
+                pass  # disappeared mid-check (its writer finished)
 
 
 class AsyncCheckpointer:

@@ -17,6 +17,7 @@ from repro.core.bucket_sort import (
     sort_with_stats,
 )
 from repro.core.distributed_sort import DistSortSpec, make_sharded_sort, sorted_shard
+from repro.core.key_codec import SUPPORTED_DTYPES, KeyCodec, codec_for
 from repro.core.partial_sort import topk, topk_batched
 from repro.core.sort_config import DEFAULT_CONFIG, PAPER_CONFIG, SortConfig
 
@@ -33,6 +34,9 @@ __all__ = [
     "sort_with_stats",
     "topk",
     "topk_batched",
+    "KeyCodec",
+    "codec_for",
+    "SUPPORTED_DTYPES",
     "SortConfig",
     "DEFAULT_CONFIG",
     "PAPER_CONFIG",

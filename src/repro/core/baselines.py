@@ -12,6 +12,11 @@
    bitonic-sorted tiles + log(m) rounds of pairwise bitonic merges.
 
 3. ``xla_sort`` — XLA's native sort (the "vendor library" reference).
+
+All baselines dispatch on the same ``core/key_codec`` codecs as the
+main pipeline: every codec dtype works (64-bit keys become two-word
+lexicographic sorts and need x64 mode), and the two cfg-taking entries
+honor ``cfg.descending``.
 """
 
 from __future__ import annotations
@@ -21,9 +26,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.key_codec import codec_for
 from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, next_pow2, round_up
 from repro.kernels import ops
-from repro.kernels.bitonic import bitonic_network_rows
+from repro.kernels.bitonic import as_words, lex_gt
 
 _MAXU = jnp.uint32(0xFFFFFFFF)
 _IMAX = jnp.int32(2**31 - 1)
@@ -37,81 +43,96 @@ _IMAX = jnp.int32(2**31 - 1)
 @functools.partial(
     jax.jit, static_argnames=("cfg", "capacity_factor", "with_stats")
 )
-def _randomized_canonical(u, rng_key, cfg: SortConfig, capacity_factor: float,
-                          with_stats: bool):
-    (n,) = u.shape
+def _randomized_canonical(kw, rng_key, cfg: SortConfig,
+                          capacity_factor: float, with_stats: bool):
+    """One randomized bucket round on canonical key words (tuple, msw
+    first), payload = original index.  Returns (words, perm, stats)."""
+    nw = len(kw)
+    (n,) = kw[0].shape
     t, s = cfg.tile, cfg.s
     lp = round_up(n, t)
     vals = jnp.arange(n, dtype=jnp.int32)
     if lp > n:
-        u = jnp.concatenate([u, jnp.full((lp - n,), _MAXU, jnp.uint32)])
+        kw = tuple(
+            jnp.concatenate([w, jnp.full((lp - n,), _MAXU, jnp.uint32)])
+            for w in kw
+        )
         vals = jnp.concatenate(
             [vals, lp + jnp.arange(lp - n, dtype=jnp.int32)]
         )
     m = lp // t
 
-    tk, tv = ops.sort_tiles(
-        u.reshape(m, t), vals.reshape(m, t), impl=cfg.impl, interpret=cfg.interpret
+    tkw, tv = ops.sort_tiles(
+        tuple(w.reshape(m, t) for w in kw), vals.reshape(m, t),
+        impl=cfg.impl, interpret=cfg.interpret,
     )
 
     # RANDOM oversampled splitters (a*s random elements, every a-th of the
     # sorted sample), a la Leischner et al.
     a = 8
     flat_idx = jax.random.randint(rng_key, (a * s,), 0, lp)
-    sk = u[flat_idx]
-    sv = vals[flat_idx]
-    ssk, ssv = ops.sort_tiles(
-        _pad_row(sk, _MAXU), _pad_row(sv, _IMAX),
+    sskw, ssv = ops.sort_tiles(
+        tuple(_pad_row(w[flat_idx], _MAXU) for w in kw),
+        _pad_row(vals[flat_idx], _IMAX),
         impl=cfg.impl, interpret=cfg.interpret,
     )
+    sskw = as_words(sskw)
     sp_idx = jnp.arange(1, s, dtype=jnp.int32) * a
-    spk = jnp.broadcast_to(ssk[0, sp_idx], (m, s - 1))
+    spkw = tuple(jnp.broadcast_to(w[0, sp_idx], (m, s - 1)) for w in sskw)
     spv = jnp.broadcast_to(ssv[0, sp_idx], (m, s - 1))
 
     ranks = ops.splitter_ranks(
-        tk, tv, spk, spv, impl=cfg.impl, interpret=cfg.interpret
+        tkw, tv, spkw, spv, impl=cfg.impl, interpret=cfg.interpret
     )
     zeros = jnp.zeros((m, 1), jnp.int32)
     starts = jnp.concatenate([zeros, ranks], axis=1)
     counts = (
         jnp.concatenate([ranks, jnp.full((m, 1), t, jnp.int32)], axis=1) - starts
     )
-    tile_off = jnp.cumsum(counts, axis=0) - counts  # (m, s)
-    totals = counts.sum(axis=0)  # (s,)
+    tile_off = jnp.cumsum(counts, axis=0, dtype=jnp.int32) - counts  # (m, s)
+    totals = counts.sum(axis=0, dtype=jnp.int32)  # (s,)
 
     # NO deterministic bound here -> heuristic static capacity + overflow.
     cap = round_up(int(capacity_factor * lp / s), 128)
     pos = jax.lax.broadcasted_iota(jnp.int32, (m, t), 1)
     ind = jnp.zeros((m, t + 1), jnp.int32)
     ind = ind.at[jax.lax.broadcasted_iota(jnp.int32, ranks.shape, 0), ranks].add(1)
-    bucket_id = jnp.cumsum(ind, axis=1)[:, :t]
+    bucket_id = jnp.cumsum(ind, axis=1, dtype=jnp.int32)[:, :t]
     p_rel = pos - jnp.take_along_axis(starts, bucket_id, axis=1)
     within = jnp.take_along_axis(tile_off, bucket_id, axis=1) + p_rel
     dest = bucket_id * cap + within
     overflow = jnp.sum(within >= cap)
-    dest = jnp.where(within < cap, dest, s * cap)
+    dest = jnp.where(within < cap, dest, s * cap).reshape(-1)
 
-    bk = jnp.full((s * cap,), _MAXU, jnp.uint32)
+    bkw = tuple(
+        jnp.full((s * cap,), _MAXU, jnp.uint32)
+        .at[dest].set(w.reshape(-1), mode="drop")
+        for w in tkw
+    )
     bv = jnp.full((s * cap,), _IMAX, jnp.int32)
-    bk = bk.at[dest.reshape(-1)].set(tk.reshape(-1), mode="drop")
-    bv = bv.at[dest.reshape(-1)].set(tv.reshape(-1), mode="drop")
+    bv = bv.at[dest].set(tv.reshape(-1), mode="drop")
 
     # bucket sort via XLA row sort (stand-in for the recursive step 9)
-    sk2, sv2 = jax.lax.sort(
-        (bk.reshape(s, cap), bv.reshape(s, cap)), dimension=-1, num_keys=2
+    out = jax.lax.sort(
+        tuple(w.reshape(s, cap) for w in bkw) + (bv.reshape(s, cap),),
+        dimension=-1, num_keys=nw + 1,
     )
+    skw2, sv2 = out[:-1], out[-1]
 
     # compact buckets back to dense
-    boff = jnp.cumsum(totals) - totals
+    boff = jnp.cumsum(totals, dtype=jnp.int32) - totals
     p = jax.lax.broadcasted_iota(jnp.int32, (s, cap), 1)
     valid = p < totals[:, None]
-    dflat = jnp.where(valid, boff[:, None] + p, lp)
-    okk = jnp.full((lp,), _MAXU, jnp.uint32)
+    dflat = jnp.where(valid, boff[:, None] + p, lp).reshape(-1)
+    okw = tuple(
+        jnp.full((lp,), _MAXU, jnp.uint32)
+        .at[dflat].set(w.reshape(-1), mode="drop")
+        for w in skw2
+    )
     ovv = jnp.full((lp,), _IMAX, jnp.int32)
-    okk = okk.at[dflat.reshape(-1)].set(sk2.reshape(-1), mode="drop")
-    ovv = ovv.at[dflat.reshape(-1)].set(sv2.reshape(-1), mode="drop")
+    ovv = ovv.at[dflat].set(sv2.reshape(-1), mode="drop")
     stats = (jnp.max(totals), overflow) if with_stats else (None, None)
-    return okk[:n], ovv[:n], stats
+    return tuple(w[:n] for w in okw), ovv[:n], stats
 
 
 def _pad_row(x, fill):
@@ -129,18 +150,24 @@ def randomized_sample_sort(
     capacity_factor: float = 4.0,
     with_stats: bool = False,
 ):
-    """Randomized sample sort baseline.  Returns (sorted, perm[, stats]).
+    """Randomized sample sort baseline.
 
-    stats = (max_bucket_fill, overflow_count): overflow > 0 means dropped
-    elements (result invalid — caller must retry with a larger factor).
-    This data-dependent failure mode is precisely what the deterministic
-    algorithm eliminates.
+    Args:
+        x: 1-D array of any codec dtype (``cfg.descending`` honored).
+        rng_key: jax PRNG key for the random splitter sample.
+        capacity_factor: static bucket capacity = factor * n/s.
+        with_stats: also return (max_bucket_fill, overflow_count).
+    Returns:
+        (sorted, perm[, stats]).  overflow > 0 means dropped elements
+        (result invalid — caller must retry with a larger factor).  This
+        data-dependent failure mode is precisely what the deterministic
+        algorithm eliminates.
     """
-    u = ops.to_sortable(x)
-    sk, sv, stats = _randomized_canonical(
-        u, rng_key, cfg, capacity_factor, with_stats
+    codec = codec_for(x.dtype, cfg.descending)
+    skw, sv, stats = _randomized_canonical(
+        codec.encode(x), rng_key, cfg, capacity_factor, with_stats
     )
-    out = ops.from_sortable(sk, x.dtype)
+    out = codec.decode(skw)
     if with_stats:
         return out, sv, stats
     return out, sv
@@ -151,68 +178,81 @@ def randomized_sample_sort(
 # ----------------------------------------------------------------------
 
 
-def _bitonic_merge_rows(keys, vals):
-    """Merge rows of (r, 2L) where [:, :L] ascends and [:, L:] descends."""
-    c = keys.shape[-1]
+def _bitonic_merge_rows(parts):
+    """Merge rows of (r, 2L) parts where [:, :L] ascends and [:, L:]
+    descends, jointly over (key words + payload)."""
+    c = parts[0].shape[-1]
     d = c // 2
     while d >= 1:
-        keys, vals = _merge_pass(keys, vals, d)
+        parts = _merge_pass(parts, d)
         d //= 2
-    return keys, vals
+    return parts
 
 
-def _merge_pass(keys, vals, d):
-    lead = keys.shape[:-1]
-    c = keys.shape[-1]
-    k3 = keys.reshape(lead + (c // (2 * d), 2, d))
-    v3 = vals.reshape(lead + (c // (2 * d), 2, d))
-    klo, khi = k3[..., 0, :], k3[..., 1, :]
-    vlo, vhi = v3[..., 0, :], v3[..., 1, :]
-    swap = (klo > khi) | ((klo == khi) & (vlo > vhi))
-    nk = jnp.stack(
-        (jnp.where(swap, khi, klo), jnp.where(swap, klo, khi)), axis=-2
-    ).reshape(lead + (c,))
-    nv = jnp.stack(
-        (jnp.where(swap, vhi, vlo), jnp.where(swap, vlo, vhi)), axis=-2
-    ).reshape(lead + (c,))
-    return nk, nv
+def _merge_pass(parts, d):
+    lead = parts[0].shape[:-1]
+    c = parts[0].shape[-1]
+    r3 = [p.reshape(lead + (c // (2 * d), 2, d)) for p in parts]
+    los = [p[..., 0, :] for p in r3]
+    his = [p[..., 1, :] for p in r3]
+    swap = lex_gt(los, his)
+    return tuple(
+        jnp.stack(
+            (jnp.where(swap, hi, lo), jnp.where(swap, lo, hi)), axis=-2
+        ).reshape(lead + (c,))
+        for lo, hi in zip(los, his)
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def _merge_canonical(u, cfg: SortConfig):
-    (n,) = u.shape
+def _merge_canonical(kw, cfg: SortConfig):
+    (n,) = kw[0].shape
     t = cfg.tile
     lp = max(round_up(n, t), t)
     vals = jnp.arange(n, dtype=jnp.int32)
     if lp > n:
-        u = jnp.concatenate([u, jnp.full((lp - n,), _MAXU, jnp.uint32)])
+        kw = tuple(
+            jnp.concatenate([w, jnp.full((lp - n,), _MAXU, jnp.uint32)])
+            for w in kw
+        )
         vals = jnp.concatenate([vals, lp + jnp.arange(lp - n, dtype=jnp.int32)])
     m = lp // t
-    tk, tv = ops.sort_tiles(
-        u.reshape(m, t), vals.reshape(m, t), impl=cfg.impl, interpret=cfg.interpret
+    tkw, tv = ops.sort_tiles(
+        tuple(w.reshape(m, t) for w in kw), vals.reshape(m, t),
+        impl=cfg.impl, interpret=cfg.interpret,
     )
     # pad row count to a power of two with all-MAX rows
     mp = next_pow2(m)
     if mp > m:
-        tk = jnp.concatenate(
-            [tk, jnp.full((mp - m, t), _MAXU, jnp.uint32)], axis=0
+        tkw = tuple(
+            jnp.concatenate(
+                [w, jnp.full((mp - m, t), _MAXU, jnp.uint32)], axis=0
+            )
+            for w in tkw
         )
         tv = jnp.concatenate([tv, jnp.full((mp - m, t), _IMAX, jnp.int32)], axis=0)
-    while tk.shape[0] > 1:
-        r, length = tk.shape
-        a_k, b_k = tk[0::2], tk[1::2]
-        a_v, b_v = tv[0::2], tv[1::2]
-        cat_k = jnp.concatenate([a_k, b_k[:, ::-1]], axis=1)  # bitonic rows
-        cat_v = jnp.concatenate([a_v, b_v[:, ::-1]], axis=1)
-        tk, tv = _bitonic_merge_rows(cat_k, cat_v)
-    return tk[0, :n], tv[0, :n]
+    parts = tkw + (tv,)
+    while parts[0].shape[0] > 1:
+        # bitonic rows: even rows ascend, odd rows reversed (descend)
+        cat = tuple(
+            jnp.concatenate([p[0::2], p[1::2][:, ::-1]], axis=1)
+            for p in parts
+        )
+        parts = _bitonic_merge_rows(cat)
+    return tuple(p[0, :n] for p in parts[:-1]), parts[-1][0, :n]
 
 
 def merge_sort(x: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
-    """Thrust-Merge-like baseline: tile sort + pairwise bitonic merging."""
-    u = ops.to_sortable(x)
-    sk, sv = _merge_canonical(u, cfg)
-    return ops.from_sortable(sk, x.dtype), sv
+    """Thrust-Merge-like baseline: tile sort + pairwise bitonic merging.
+
+    Args:
+        x: 1-D array of any codec dtype (``cfg.descending`` honored).
+    Returns:
+        (sorted, perm) — stable, like the main pipeline.
+    """
+    codec = codec_for(x.dtype, cfg.descending)
+    skw, sv = _merge_canonical(codec.encode(x), cfg)
+    return codec.decode(skw), sv
 
 
 # ----------------------------------------------------------------------
@@ -220,23 +260,35 @@ def merge_sort(x: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
 # ----------------------------------------------------------------------
 
 
-@jax.jit
-def xla_sort(x: jax.Array):
-    """XLA's built-in sort (reference oracle + perf baseline)."""
+@functools.partial(jax.jit, static_argnames=("descending",))
+def xla_sort(x: jax.Array, descending: bool = False):
+    """XLA's built-in sort (reference oracle + perf baseline).
+
+    Args:
+        x: 1-D array of any codec dtype.
+        descending: stable descending order (codec complement).
+    Returns:
+        (sorted, perm) with perm the stable argsort.
+    """
+    codec = codec_for(x.dtype, descending)
+    kw = codec.encode(x)
     idx = jnp.arange(x.shape[0], dtype=jnp.int32)
-    u = ops.to_sortable(x)
-    sk, sv = jax.lax.sort((u, idx), dimension=0, num_keys=2)
-    return ops.from_sortable(sk, x.dtype), sv
+    out = jax.lax.sort((*kw, idx), dimension=0, num_keys=len(kw) + 1)
+    return codec.decode(tuple(out[:-1])), out[-1]
 
 
-@jax.jit
-def xla_sort_batched(x: jax.Array):
+@functools.partial(jax.jit, static_argnames=("descending",))
+def xla_sort_batched(x: jax.Array, descending: bool = False):
     """XLA's built-in row-wise sort of (B, L): the reference oracle and
-    perf baseline for ``sort_batched`` (stable via index tiebreak)."""
+    perf baseline for ``sort_batched`` (stable via index tiebreak).
+
+    Args/Returns: as :func:`xla_sort`, per row.
+    """
     b, length = x.shape
+    codec = codec_for(x.dtype, descending)
+    kw = codec.encode(x)
     idx = jnp.broadcast_to(
         jnp.arange(length, dtype=jnp.int32)[None, :], (b, length)
     )
-    u = ops.to_sortable(x)
-    sk, sv = jax.lax.sort((u, idx), dimension=1, num_keys=2)
-    return ops.from_sortable(sk, x.dtype), sv
+    out = jax.lax.sort((*kw, idx), dimension=1, num_keys=len(kw) + 1)
+    return codec.decode(tuple(out[:-1])), out[-1]

@@ -1,6 +1,7 @@
 """GPU BUCKET SORT (Dehne & Zaboli 2010, Algorithm 1) — TPU-native, static shapes.
 
-Single-device deterministic sample sort.  The paper's nine steps map to:
+Single-device deterministic sample sort.  The paper's nine steps map to
+(full file:symbol table in docs/paper_map.md):
 
   step 1  split into tiles            -> reshape (rows, L) -> (rows*m, T)
   step 2  local sort per SM           -> row-blocked Pallas bitonic sort
@@ -30,6 +31,15 @@ the whole batch through a single `_sort_rows` recursion — one kernel
 launch per pipeline step for the entire batch, no vmap over the 1-D
 entry point, no per-row retracing.
 
+DTYPE GENERICITY (DESIGN.md §6): the engine is dtype-agnostic — it
+sorts tuples of canonical uint32 KEY WORDS (most significant first)
+lexicographically, with the int32 payload as the final tiebreak.  A
+``core/key_codec`` codec maps each user dtype to that domain: one word
+for <= 32-bit dtypes (int32/uint32/float32, widened bool/8/16-bit),
+hi/lo pairs for int64/uint64/float64, and an order-reversing complement
+for ``SortConfig.descending``.  Every public entry point below supports
+every codec dtype; 64-bit dtypes need x64 mode enabled.
+
 Relocation/compaction are SCATTER-FREE on the default path (DESIGN.md
 §4): both passes compute, for every destination slot, the source index
 it must read (via a binary search over the chunk-offset tables) and
@@ -50,7 +60,7 @@ Correctness invariants (tested, incl. hypothesis properties):
     per-row amounts, so the int32 payload budget is independent of the
     batch size.
 
-Usage::
+Usage (see docs/api.md for the full reference)::
 
     from repro.core import bucket_sort
     from repro.core.sort_config import SortConfig
@@ -58,6 +68,7 @@ Usage::
     y = bucket_sort.sort(x)                    # 1-D, ascending, stable
     perm = bucket_sort.argsort(x)              # == np.argsort(x, kind="stable")
     sk, sv = bucket_sort.sort_kv(x, payload)   # payload rides along
+    y = bucket_sort.sort(x, SortConfig(descending=True))   # stable desc
 
     # Batched: B independent sorts in ONE launch (B, L) -> (B, L).
     ys = bucket_sort.sort_batched(xs)
@@ -84,6 +95,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.key_codec import codec_for
 from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, next_pow2, round_up
 from repro.kernels import ops
 
@@ -91,58 +103,68 @@ _MAXU = jnp.uint32(0xFFFFFFFF)
 _INT_MAX = 2**31 - 1
 
 
-def _pad_cols(keys, vals, new_len, pad_base):
-    """Pad the last axis to new_len with (MAXU, pad_base + j) pairs.
+def _pad_cols(kw, vals, new_len, pad_base):
+    """Pad the last axis to new_len with (all-ones words, pad_base + j).
+
+    Args:
+        kw: tuple of (r, L) uint32 key-word arrays (msw first).
+        vals: (r, L) int32 payloads.
+    Returns:
+        (padded kw, padded vals, advanced pad_base).
 
     Pad payloads are unique PER ROW (rows never compare against each
     other) and >= pad_base > every real payload in the row, so pads
     sort after all real elements and the pad budget is independent of
     the row count.
     """
-    r, length = keys.shape
+    r, length = kw[0].shape
     extra = new_len - length
     if extra == 0:
-        return keys, vals, pad_base
+        return kw, vals, pad_base
     pk = jnp.full((r, extra), _MAXU, jnp.uint32)
     pv = jnp.int32(pad_base) + jax.lax.broadcasted_iota(
         jnp.int32, (r, extra), 1
     )
-    keys = jnp.concatenate([keys, pk], axis=1)
+    kw = tuple(jnp.concatenate([w, pk], axis=1) for w in kw)
     vals = jnp.concatenate([vals, pv], axis=1)
-    return keys, vals, pad_base + extra
+    return kw, vals, pad_base + extra
 
 
-def _direct_sort(keys, vals, cfg, pad_base):
+def _direct_sort(kw, vals, cfg, pad_base):
     """Single-tile bitonic sort of each row (rows, L), L <= direct_max."""
-    r, length = keys.shape
+    r, length = kw[0].shape
     lp = next_pow2(length)
-    keys, vals, pad_base = _pad_cols(keys, vals, lp, pad_base)
+    kw, vals, pad_base = _pad_cols(kw, vals, lp, pad_base)
     sk, sv = ops.sort_tiles(
-        keys, vals, impl=cfg.impl, interpret=cfg.interpret,
+        kw, vals, impl=cfg.impl, interpret=cfg.interpret,
         block_rows=cfg.block_rows,
     )
-    return sk[:, :length], sv[:, :length], pad_base
+    return tuple(w[:, :length] for w in sk), sv[:, :length], pad_base
 
 
 def _chunk_search(offsets, positions):
     """For each row: index of the chunk containing each position.
 
-    offsets: (Q, C) non-decreasing exclusive chunk starts (offsets[:, 0]
-    == 0); positions: (Q, P) query positions.  Returns (Q, P) int32 j
-    with offsets[q, j] <= positions[q, p] < offsets[q, j+1] — i.e. the
-    LAST chunk starting at or before the position, which skips empty
-    chunks (ties in ``offsets``) correctly.  Pure binary search: lowers
-    to gathers, never a scatter.
+    Args:
+        offsets: (Q, C) non-decreasing exclusive chunk starts
+            (offsets[:, 0] == 0).
+        positions: (Q, P) query positions.
+    Returns:
+        (Q, P) int32 j with offsets[q, j] <= positions[q, p] <
+        offsets[q, j+1] — i.e. the LAST chunk starting at or before the
+        position, which skips empty chunks (ties in ``offsets``)
+        correctly.  Pure binary search: lowers to gathers, never a
+        scatter.
     """
     find = jax.vmap(lambda o, p: jnp.searchsorted(o, p, side="right"))
     return find(offsets, positions).astype(jnp.int32) - 1
 
 
-def _relocate_gather(tk, tv, starts, tile_off, totals, r, m, s_round, t, cap,
+def _relocate_gather(tkw, tv, starts, tile_off, totals, r, m, s_round, t, cap,
                      pad_base):
     """Step 8, scatter-free (DESIGN.md §4): for every slot of the dense
     (r*s_round, cap) bucket array compute the SOURCE element it receives,
-    then gather.
+    then gather (one `take` per key word + one for the payload).
 
     Bucket row q = r'*s_round + j receives, tile by tile, the elements
     of tile i = 0..m-1 of data row r' that fall in key range j; tile i's
@@ -166,25 +188,30 @@ def _relocate_gather(tk, tv, starts, tile_off, totals, r, m, s_round, t, cap,
     src = (row_base + src_tile) * t + src_start + (p - src_off)
     valid = p < totals.reshape(r * s_round, 1)
     src = jnp.where(valid, src, 0)
-    gk = jnp.take(tk.reshape(-1), src.reshape(-1)).reshape(src.shape)
-    gv = jnp.take(tv.reshape(-1), src.reshape(-1)).reshape(src.shape)
+    srcf = src.reshape(-1)
+    bkw = tuple(
+        jnp.where(
+            valid, jnp.take(w.reshape(-1), srcf).reshape(src.shape), _MAXU
+        )
+        for w in tkw
+    )
+    gv = jnp.take(tv.reshape(-1), srcf).reshape(src.shape)
     pad_v = jnp.int32(pad_base) + p
-    bk = jnp.where(valid, gk, _MAXU)
     bv = jnp.where(valid, gv, pad_v)
-    return bk, bv
+    return bkw, bv
 
 
-def _relocate_scatter(tk, tv, ranks, starts, tile_off, r, m, s_round, t, cap,
+def _relocate_scatter(tkw, tv, ranks, starts, tile_off, r, m, s_round, t, cap,
                       pad_base):
     """Step 8, legacy destination-scatter reference path: compute each
-    ELEMENT's destination slot and scatter.  XLA serializes the two
+    ELEMENT's destination slot and scatter.  XLA serializes the
     full-size 1-D scatters; kept only for cfg.relocation="scatter"."""
     pos = jax.lax.broadcasted_iota(jnp.int32, (r * m, t), 1)
     ind = jnp.zeros((r * m, t + 1), jnp.int32)
     ind = ind.at[
         jax.lax.broadcasted_iota(jnp.int32, ranks.shape, 0), ranks
     ].add(1)
-    bucket_id = jnp.cumsum(ind, axis=1)[:, :t]  # (r*m, T) in [0, s_round-1]
+    bucket_id = jnp.cumsum(ind, axis=1, dtype=jnp.int32)[:, :t]  # (r*m, T)
     p_rel = pos - jnp.take_along_axis(starts, bucket_id, axis=1)
     within = (
         jnp.take_along_axis(tile_off.reshape(r * m, s_round), bucket_id, axis=1)
@@ -194,106 +221,120 @@ def _relocate_scatter(tk, tv, ranks, starts, tile_off, r, m, s_round, t, cap,
     dest = (row_id * s_round + bucket_id) * cap + within
     # The capacity bound guarantees within < cap; tests assert no drops.
     dest = jnp.where(within < cap, dest, r * s_round * cap)
+    destf = dest.reshape(-1)
 
     # Unwritten slots hold the same per-row pads as the gather path.
-    bk = jnp.full((r * s_round, cap), _MAXU, jnp.uint32).reshape(-1)
+    bkw = tuple(
+        jnp.full((r * s_round * cap,), _MAXU, jnp.uint32)
+        .at[destf].set(w.reshape(-1), mode="drop")
+        .reshape(r * s_round, cap)
+        for w in tkw
+    )
     bv = (
         jnp.int32(pad_base)
         + jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 1)
     ).reshape(-1)
-    bk = bk.at[dest.reshape(-1)].set(tk.reshape(-1), mode="drop")
-    bv = bv.at[dest.reshape(-1)].set(tv.reshape(-1), mode="drop")
-    return bk.reshape(r * s_round, cap), bv.reshape(r * s_round, cap)
+    bv = bv.at[destf].set(tv.reshape(-1), mode="drop")
+    return bkw, bv.reshape(r * s_round, cap)
 
 
-def _compact_gather(ck, cv, totals, r, s_round, cap, lp):
+def _compact_gather(ckw, cv, totals, r, s_round, cap, lp):
     """Step 9 compaction, scatter-free: dense column c of data row r'
     reads from bucket j covering c (binary search over the s_round
     bucket offsets) at position c - bucket_off.  Bucket fills sum to lp
     per row, so every dense slot has exactly one source — no pads."""
-    bucket_off = jnp.cumsum(totals, axis=1) - totals  # (r, s_round) excl.
+    bucket_off = jnp.cumsum(totals, axis=1, dtype=jnp.int32) - totals  # (r, s_round)
     c = jax.lax.broadcasted_iota(jnp.int32, (r, lp), 1)
     srcj = _chunk_search(bucket_off, c)  # (r, lp) bucket index
     within = c - jnp.take_along_axis(bucket_off, srcj, axis=1)
     row = jax.lax.broadcasted_iota(jnp.int32, (r, lp), 0)
     src = (row * s_round + srcj) * cap + within
-    ok = jnp.take(ck.reshape(-1), src.reshape(-1)).reshape(r, lp)
-    ov = jnp.take(cv.reshape(-1), src.reshape(-1)).reshape(r, lp)
-    return ok, ov
+    srcf = src.reshape(-1)
+    okw = tuple(jnp.take(w.reshape(-1), srcf).reshape(r, lp) for w in ckw)
+    ov = jnp.take(cv.reshape(-1), srcf).reshape(r, lp)
+    return okw, ov
 
 
-def _compact_scatter(ck, cv, totals, r, s_round, cap, lp):
+def _compact_scatter(ckw, cv, totals, r, s_round, cap, lp):
     """Step 9 compaction, legacy scatter reference path."""
-    bucket_off = jnp.cumsum(totals, axis=1) - totals  # (r, s_round) excl.
+    bucket_off = jnp.cumsum(totals, axis=1, dtype=jnp.int32) - totals  # (r, s_round)
     p = jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 1)
     valid = p < totals.reshape(r * s_round, 1)
     drow = jax.lax.broadcasted_iota(jnp.int32, (r * s_round, cap), 0) // s_round
     dcol = bucket_off.reshape(r * s_round, 1) + p
-    dflat = jnp.where(valid, drow * lp + dcol, r * lp)
-    ok = jnp.full((r * lp,), _MAXU, jnp.uint32)
+    dflat = jnp.where(valid, drow * lp + dcol, r * lp).reshape(-1)
+    okw = tuple(
+        jnp.full((r * lp,), _MAXU, jnp.uint32)
+        .at[dflat].set(w.reshape(-1), mode="drop")
+        .reshape(r, lp)
+        for w in ckw
+    )
     ov = jnp.full((r * lp,), jnp.int32(_INT_MAX))
-    ok = ok.at[dflat.reshape(-1)].set(ck.reshape(-1), mode="drop")
-    ov = ov.at[dflat.reshape(-1)].set(cv.reshape(-1), mode="drop")
-    return ok.reshape(r, lp), ov.reshape(r, lp)
+    ov = ov.at[dflat].set(cv.reshape(-1), mode="drop")
+    return okw, ov.reshape(r, lp)
 
 
-def _sort_rows(keys, vals, cfg: SortConfig, pad_base: int, stats: list | None):
-    """Sort each row of (rows, L) canonical uint32 keys / int32 payloads.
+def _sort_rows(kw, vals, cfg: SortConfig, pad_base: int, stats: list | None):
+    """Sort each row of (rows, L) canonical key words / int32 payloads.
 
-    Returns (sorted_keys, sorted_vals, pad_base) with dense sorted rows of
-    the input shape.  Static recursion: every shape is trace-time known;
-    ``pad_base`` is a trace-time python int tracking the per-row pad
-    payload high-water mark (batch-size independent, DESIGN.md §5).
+    Args:
+        kw: tuple of (rows, L) uint32 key-word arrays (msw first).
+        vals: (rows, L) int32 payloads, unique per row.
+    Returns:
+        (sorted kw, sorted vals, pad_base) with dense sorted rows of the
+        input shape.  Static recursion: every shape is trace-time known;
+        ``pad_base`` is a trace-time python int tracking the per-row pad
+        payload high-water mark (batch-size independent, DESIGN.md §5).
     """
-    r, length = keys.shape
+    r, length = kw[0].shape
     if length <= cfg.direct_max:
-        return _direct_sort(keys, vals, cfg, pad_base)
+        return _direct_sort(kw, vals, cfg, pad_base)
 
     t, sper = cfg.tile, cfg.s
     lp = round_up(length, t)
-    keys, vals, pad_base = _pad_cols(keys, vals, lp, pad_base)
+    kw, vals, pad_base = _pad_cols(kw, vals, lp, pad_base)
     m = lp // t
 
     # Steps 1-3: row-blocked local tile sort, sample extraction fused in.
-    tk = keys.reshape(r * m, t)
+    tkw = tuple(w.reshape(r * m, t) for w in kw)
     tv = vals.reshape(r * m, t)
     if cfg.fuse_sampling:
-        tk, tv, samp_k, samp_v = ops.sort_tiles_sample(
-            tk, tv, num_samples=sper, impl=cfg.impl,
+        tkw, tv, samp_kw, samp_v = ops.sort_tiles_sample(
+            tkw, tv, num_samples=sper, impl=cfg.impl,
             interpret=cfg.interpret, block_rows=cfg.block_rows,
         )
-        samples_k = samp_k.reshape(r, m * sper)
+        samples_kw = tuple(w.reshape(r, m * sper) for w in samp_kw)
         samples_v = samp_v.reshape(r, m * sper)
     else:
-        tk, tv = ops.sort_tiles(
-            tk, tv, impl=cfg.impl, interpret=cfg.interpret,
+        tkw, tv = ops.sort_tiles(
+            tkw, tv, impl=cfg.impl, interpret=cfg.interpret,
             block_rows=cfg.block_rows,
         )
         samp_idx = (jnp.arange(1, sper + 1, dtype=jnp.int32) * (t // sper)) - 1
-        samples_k = tk[:, samp_idx].reshape(r, m * sper)
+        samples_kw = tuple(w[:, samp_idx].reshape(r, m * sper) for w in tkw)
         samples_v = tv[:, samp_idx].reshape(r, m * sper)
 
     # Step 4: sort all samples (recursive; sample array is L*s/T << L).
-    ssk, ssv, pad_base = _sort_rows(samples_k, samples_v, cfg, pad_base, None)
+    sskw, ssv, pad_base = _sort_rows(samples_kw, samples_v, cfg, pad_base, None)
 
     # Step 5: s_round - 1 equidistant global splitters.
     s_round = min(max(next_pow2(-(-2 * lp // t)), 2), sper)
     total_samples = m * sper
     sp_idx = (jnp.arange(1, s_round, dtype=jnp.int32) * total_samples) // s_round
-    spk = ssk[:, sp_idx]  # (r, s_round-1)
+    spkw = tuple(w[:, sp_idx] for w in sskw)  # (r, s_round-1) each
     spv = ssv[:, sp_idx]
 
     # Steps 6-7: splitter ranks + per-tile bucket counts (fused epilogue),
     # then the column-major prefix sums over (rows, m, s_round).
-    spk_t = jnp.repeat(spk, m, axis=0)  # (r*m, s_round-1)
+    spkw_t = tuple(jnp.repeat(w, m, axis=0) for w in spkw)  # (r*m, s_round-1)
     spv_t = jnp.repeat(spv, m, axis=0)
     if cfg.fuse_ranking:
         ranks, counts2 = ops.splitter_partition(
-            tk, tv, spk_t, spv_t, impl=cfg.impl, interpret=cfg.interpret,
+            tkw, tv, spkw_t, spv_t, impl=cfg.impl, interpret=cfg.interpret,
         )  # ranks (r*m, s_round-1); counts2 (r*m, s_round)
     else:
         ranks = ops.splitter_ranks(
-            tk, tv, spk_t, spv_t, impl=cfg.impl, interpret=cfg.interpret
+            tkw, tv, spkw_t, spv_t, impl=cfg.impl, interpret=cfg.interpret
         )  # (r*m, s_round-1), values in [0, T]
         ends = jnp.concatenate(
             [ranks, jnp.full((r * m, 1), t, jnp.int32)], axis=1
@@ -306,20 +347,20 @@ def _sort_rows(keys, vals, cfg: SortConfig, pad_base: int, stats: list | None):
     )  # (r*m, s_round): start of bucket j within tile i
     counts = counts2.reshape(r, m, s_round)
     # offset of tile i's chunk within bucket j of its row (exclusive cumsum):
-    tile_off = jnp.cumsum(counts, axis=1) - counts  # (r, m, s_round)
-    totals = counts.sum(axis=1)  # (r, s_round) true bucket fills
+    tile_off = jnp.cumsum(counts, axis=1, dtype=jnp.int32) - counts  # (r, m, s_round)
+    totals = counts.sum(axis=1, dtype=jnp.int32)  # (r, s_round) true bucket fills
 
     # Bucket capacity: regular-sampling bound (see DESIGN.md §2).
     cap = round_up(lp // s_round + lp // sper, 128)
 
     # Step 8: relocation into the dense (r*s_round, cap) bucket array.
     if cfg.relocation == "gather":
-        bk, bv = _relocate_gather(
-            tk, tv, starts, tile_off, totals, r, m, s_round, t, cap, pad_base
+        bkw, bv = _relocate_gather(
+            tkw, tv, starts, tile_off, totals, r, m, s_round, t, cap, pad_base
         )
     else:
-        bk, bv = _relocate_scatter(
-            tk, tv, ranks, starts, tile_off, r, m, s_round, t, cap, pad_base
+        bkw, bv = _relocate_scatter(
+            tkw, tv, ranks, starts, tile_off, r, m, s_round, t, cap, pad_base
         )
     pad_base += cap
 
@@ -337,70 +378,78 @@ def _sort_rows(keys, vals, cfg: SortConfig, pad_base: int, stats: list | None):
         )
 
     # Step 9: sort every bucket row (recursion), then compact to dense rows.
-    ck, cv, pad_base = _sort_rows(bk, bv, cfg, pad_base, stats)
+    ckw, cv, pad_base = _sort_rows(bkw, bv, cfg, pad_base, stats)
 
     # Compaction: first totals[q, j] entries of bucket row (q, j) are exactly
     # the elements this level relocated there (fresh pads sort after them).
     if cfg.relocation == "gather":
-        ok, ov = _compact_gather(ck, cv, totals, r, s_round, cap, lp)
+        okw, ov = _compact_gather(ckw, cv, totals, r, s_round, cap, lp)
     else:
-        ok, ov = _compact_scatter(ck, cv, totals, r, s_round, cap, lp)
-    return ok[:, :length], ov[:, :length], pad_base
+        okw, ov = _compact_scatter(ckw, cv, totals, r, s_round, cap, lp)
+    return tuple(w[:, :length] for w in okw), ov[:, :length], pad_base
 
 
 @functools.partial(
     jax.jit, static_argnames=("cfg", "pad_base0", "with_stats")
 )
-def _sort_canonical_packed(keys_u32, vals, cfg: SortConfig, pad_base0: int,
+def _sort_canonical_packed(keys_words, vals, cfg: SortConfig, pad_base0: int,
                            with_stats: bool = False):
-    """Row-native canonical entry: (B, L) uint32 keys + int32 payloads.
+    """Row-native canonical entry: (B, L) key words + int32 payloads.
 
-    ``pad_base0`` must exceed every payload already present in ``vals``
-    (per row) so recursion-introduced pads sort after real elements.
+    Args:
+        keys_words: tuple of (B, L) uint32 key-word arrays (msw first).
+        vals: (B, L) int32 payloads.
+        pad_base0: must exceed every payload already present in ``vals``
+            (per row) so recursion-introduced pads sort after real
+            elements.
+    Returns:
+        (sorted words, sorted vals[, stats]).
     """
     stats: list | None = [] if with_stats else None
-    sk, sv, pad_base = _sort_rows(keys_u32, vals, cfg, pad_base0, stats)
+    kw = tuple(keys_words)
+    skw, sv, pad_base = _sort_rows(kw, vals, cfg, pad_base0, stats)
     assert pad_base < _INT_MAX, (
         f"pad payload budget exhausted ({pad_base}); reduce L or raise s/tile"
     )
     if with_stats:
-        return sk, sv, stats
-    return sk, sv
+        return skw, sv, stats
+    return skw, sv
 
 
-def _sort_canonical_rows(keys_u32, cfg: SortConfig, with_stats: bool = False):
+def _sort_canonical_rows(kw, cfg: SortConfig, with_stats: bool = False):
     """(B, L) canonical sort with payload = original index within the row."""
-    b, n = keys_u32.shape
+    b, n = kw[0].shape
     vals = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
-    return _sort_canonical_packed(keys_u32, vals, cfg, n, with_stats)
+    return _sort_canonical_packed(kw, vals, cfg, n, with_stats)
 
 
-def _sort_canonical(keys_u32, cfg: SortConfig, with_stats: bool = False):
+def _sort_canonical(kw, cfg: SortConfig, with_stats: bool = False):
     """1-D canonical entry (single logical row of the batched path)."""
-    out = _sort_canonical_rows(keys_u32[None, :], cfg, with_stats)
+    out = _sort_canonical_rows(tuple(w[None, :] for w in kw), cfg, with_stats)
+    skw = tuple(w[0] for w in out[0])
     if with_stats:
-        return out[0][0], out[1][0], out[2]
-    return out[0][0], out[1][0]
+        return skw, out[1][0], out[2]
+    return skw, out[1][0]
 
 
-def _pad_rows(keys_u32, vals, cfg: SortConfig):
+def _pad_rows(kw, vals, cfg: SortConfig):
     """Batch-aware block_rows auto-pick (DESIGN.md §5): on the pallas
     path, pad the row count to a multiple of cfg.row_pad with all-pad
     rows so ``auto_block_rows`` always finds a power-of-two divisor
     >= row_pad and the row-blocked kernels get dense sublane blocks.
-    Returns (keys, vals, original_row_count); callers slice [:b] out.
+    Returns (kw, vals, original_row_count); callers slice [:b] out.
     """
-    b, length = keys_u32.shape
+    b, length = kw[0].shape
     impl = cfg.impl or ops.default_impl()
     if impl != "pallas" or cfg.row_pad <= 1 or b % cfg.row_pad == 0:
-        return keys_u32, vals, b
+        return kw, vals, b
     extra = round_up(b, cfg.row_pad) - b
     pk = jnp.full((extra, length), _MAXU, jnp.uint32)
     pv = jnp.broadcast_to(
         jnp.arange(length, dtype=jnp.int32)[None, :], (extra, length)
     )
     return (
-        jnp.concatenate([keys_u32, pk], axis=0),
+        tuple(jnp.concatenate([w, pk], axis=0) for w in kw),
         jnp.concatenate([vals, pv], axis=0),
         b,
     )
@@ -412,49 +461,93 @@ def _pad_rows(keys_u32, vals, cfg: SortConfig):
 
 
 def sort(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
-    """Deterministic sample sort of a 1-D array (ascending, total order)."""
+    """Deterministic sample sort of a 1-D array (stable, total order).
+
+    Args:
+        keys: 1-D array of any codec dtype — int8/16/32/64, uint8/16/32/64,
+            float16/bfloat16/float32/float64, bool (64-bit dtypes need
+            x64 mode).  Floats follow the IEEE total order (NaN last
+            ascending).
+        cfg: pipeline knobs; ``cfg.descending`` flips the order
+            (stable, codec-level — see SortConfig).
+    Returns:
+        Sorted array, same shape/dtype.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> from repro.core import bucket_sort
+        >>> bucket_sort.sort(jnp.asarray([3, 1, 2]))
+        Array([1, 2, 3], dtype=int32)
+    """
     if keys.shape[0] <= 1:
         return keys
-    u = ops.to_sortable(keys)
-    su, _ = _sort_canonical(u, cfg)
-    return ops.from_sortable(su, keys.dtype)
+    codec = codec_for(keys.dtype, cfg.descending)
+    su, _ = _sort_canonical(codec.encode(keys), cfg)
+    return codec.decode(su)
 
 
 def argsort(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
-    """Stable argsort via deterministic sample sort."""
+    """Stable argsort via deterministic sample sort.
+
+    Args:
+        keys: 1-D array of any codec dtype (see :func:`sort`).
+        cfg: pipeline knobs; ``cfg.descending`` gives the stable
+            descending permutation (ties keep input order), matching
+            ``jnp.argsort(x, descending=True, stable=True)``.
+    Returns:
+        int32 permutation, == ``np.argsort(keys, kind="stable")`` when
+        ascending.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> from repro.core import bucket_sort
+        >>> bucket_sort.argsort(jnp.asarray([30.0, 10.0, 20.0]))
+        Array([1, 2, 0], dtype=int32)
+    """
     if keys.shape[0] <= 1:
         return jnp.arange(keys.shape[0], dtype=jnp.int32)
-    u = ops.to_sortable(keys)
-    _, perm = _sort_canonical(u, cfg)
+    codec = codec_for(keys.dtype, cfg.descending)
+    _, perm = _sort_canonical(codec.encode(keys), cfg)
     return perm
 
 
 def sort_kv(keys: jax.Array, values: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
-    """Stable (keys, values) sort by keys.  values: any array, leading dim n."""
+    """Stable (keys, values) sort by keys.
+
+    Args:
+        keys: 1-D array of any codec dtype (see :func:`sort`), length n.
+        values: any array with leading dim n; permuted along axis 0.
+        cfg: pipeline knobs (``descending`` supported).
+    Returns:
+        (sorted_keys, values[perm]).
+    """
     assert keys.ndim == 1 and values.shape[0] == keys.shape[0]
     n = keys.shape[0]
     if n <= 1:
         return keys, values
-    u = ops.to_sortable(keys)
-    su, perm = _sort_canonical(u, cfg)
-    return ops.from_sortable(su, keys.dtype), jnp.take(values, perm, axis=0)
+    codec = codec_for(keys.dtype, cfg.descending)
+    su, perm = _sort_canonical(codec.encode(keys), cfg)
+    return codec.decode(su), jnp.take(values, perm, axis=0)
 
 
 def sort_with_stats(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
     """Sort + per-round stats (capacities, bucket fills) for bound tests.
 
-    Returns (sorted, perm, stats).  ``stats`` has one dict per bucket
-    round (keys: level_len, rows, s_round, capacity, totals,
-    max_within).  Inputs that fit ``cfg.direct_max`` take the
-    single-tile bitonic path and run ZERO bucket rounds: stats is a
-    well-defined EMPTY list — callers must check before indexing.
+    Args:
+        keys: 1-D array of any codec dtype.
+    Returns:
+        (sorted, perm, stats).  ``stats`` has one dict per bucket round
+        (keys: level_len, rows, s_round, capacity, totals, max_within).
+        Inputs that fit ``cfg.direct_max`` take the single-tile bitonic
+        path and run ZERO bucket rounds: stats is a well-defined EMPTY
+        list — callers must check before indexing.
     """
     n = keys.shape[0]
     if n <= 1:
         return keys, jnp.arange(n, dtype=jnp.int32), []
-    u = ops.to_sortable(keys)
-    su, perm, stats = _sort_canonical(u, cfg, with_stats=True)
-    return ops.from_sortable(su, keys.dtype), perm, stats
+    codec = codec_for(keys.dtype, cfg.descending)
+    su, perm, stats = _sort_canonical(codec.encode(keys), cfg, with_stats=True)
+    return codec.decode(su), perm, stats
 
 
 # ----------------------------------------------------------------------
@@ -463,45 +556,59 @@ def sort_with_stats(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
 
 
 def _batched_entry(keys, cfg: SortConfig):
-    """Shared batched preamble: canonical keys, per-row index payloads,
-    row_pad alignment.  Returns (u, vals, b) — slice results [:b]."""
+    """Shared batched preamble: canonical key words, per-row index
+    payloads, row_pad alignment.  Returns (codec, kw, vals, b) — slice
+    results [:b]."""
     b, length = keys.shape
-    u, vals, _ = _pad_rows(
-        ops.to_sortable(keys),
+    codec = codec_for(keys.dtype, cfg.descending)
+    kw, vals, _ = _pad_rows(
+        codec.encode(keys),
         jnp.broadcast_to(jnp.arange(length, dtype=jnp.int32)[None, :],
                          (b, length)),
         cfg,
     )
-    return u, vals, b
+    return codec, kw, vals, b
 
 
 def sort_batched(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
-    """Sort each row of a (B, L) array independently (ascending, stable).
+    """Sort each row of a (B, L) array independently (stable).
 
     Equivalent to B independent 1-D ``sort`` calls, but the whole batch
     enters the row-native pipeline with rows=B: one kernel launch per
     pipeline step for the entire batch (DESIGN.md §5).
+
+    Args:
+        keys: (B, L) array of any codec dtype (see :func:`sort`).
+        cfg: pipeline knobs (``descending`` supported).
+    Returns:
+        (B, L) array, every row sorted.
     """
     assert keys.ndim == 2, keys.shape
     b, length = keys.shape
     if b == 0 or length <= 1:
         return keys
-    u, vals, b = _batched_entry(keys, cfg)
-    sk, _ = _sort_canonical_packed(u, vals, cfg, length)
-    return ops.from_sortable(sk[:b], keys.dtype)
+    codec, kw, vals, b = _batched_entry(keys, cfg)
+    sk, _ = _sort_canonical_packed(kw, vals, cfg, length)
+    return codec.decode(tuple(w[:b] for w in sk))
 
 
 def argsort_batched(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
     """Per-row stable argsort of (B, L): row i of the result is
-    ``np.argsort(keys[i], kind="stable")``."""
+    ``np.argsort(keys[i], kind="stable")`` (descending via cfg).
+
+    Args:
+        keys: (B, L) array of any codec dtype.
+    Returns:
+        (B, L) int32 permutations.
+    """
     assert keys.ndim == 2, keys.shape
     b, length = keys.shape
     if b == 0 or length <= 1:
         return jnp.broadcast_to(
             jnp.arange(length, dtype=jnp.int32)[None, :], (b, length)
         )
-    u, vals, b = _batched_entry(keys, cfg)
-    _, perm = _sort_canonical_packed(u, vals, cfg, length)
+    _, kw, vals, b = _batched_entry(keys, cfg)
+    _, perm = _sort_canonical_packed(kw, vals, cfg, length)
     return perm[:b]
 
 
@@ -509,8 +616,12 @@ def sort_kv_batched(keys: jax.Array, values: jax.Array,
                     cfg: SortConfig = DEFAULT_CONFIG):
     """Per-row stable (keys, values) sort of (B, L) keys by keys.
 
-    values: (B, L, ...) — any trailing shape; permuted along axis 1 with
-    each row's permutation.
+    Args:
+        keys: (B, L) array of any codec dtype.
+        values: (B, L, ...) — any trailing shape; permuted along axis 1
+            with each row's permutation.
+    Returns:
+        (sorted_keys (B, L), permuted values).
     """
     assert keys.ndim == 2 and values.shape[:2] == keys.shape, (
         keys.shape, values.shape
@@ -518,12 +629,12 @@ def sort_kv_batched(keys: jax.Array, values: jax.Array,
     b, length = keys.shape
     if b == 0 or length <= 1:
         return keys, values
-    u, vals, b = _batched_entry(keys, cfg)
-    sk, perm = _sort_canonical_packed(u, vals, cfg, length)
-    sk, perm = sk[:b], perm[:b]
+    codec, kw, vals, b = _batched_entry(keys, cfg)
+    sk, perm = _sort_canonical_packed(kw, vals, cfg, length)
+    sk, perm = tuple(w[:b] for w in sk), perm[:b]
     idx = perm.reshape(perm.shape + (1,) * (values.ndim - 2))
     sv = jnp.take_along_axis(values, idx, axis=1)
-    return ops.from_sortable(sk, keys.dtype), sv
+    return codec.decode(sk), sv
 
 
 def sort_batched_with_stats(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
@@ -541,11 +652,11 @@ def sort_batched_with_stats(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
             jnp.arange(length, dtype=jnp.int32)[None, :], (b, length)
         )
         return keys, perm, []
-    u, vals, b = _batched_entry(keys, cfg)
+    codec, kw, vals, b = _batched_entry(keys, cfg)
     sk, perm, stats = _sort_canonical_packed(
-        u, vals, cfg, length, with_stats=True
+        kw, vals, cfg, length, with_stats=True
     )
-    return ops.from_sortable(sk[:b], keys.dtype), perm[:b], stats
+    return codec.decode(tuple(w[:b] for w in sk)), perm[:b], stats
 
 
 # ----------------------------------------------------------------------
@@ -587,57 +698,72 @@ def _segment_layout(n: int, segment_offsets):
 def _segment_sorted_packed(x: jax.Array, segment_offsets, cfg: SortConfig):
     """Shared segment pipeline: pack ragged segments of 1-D x into a
     padded (S, W) batch (scatter-free gather), run the row-native sort,
-    and return (sorted_keys (S, W), local_perm (S, W), layout).
+    and return (codec, sorted words (S, W), local_perm (S, W), layout).
 
     Packing rule (DESIGN.md §5): row i holds segment i left-justified;
-    columns past the segment length hold (MAXU, W + j) pads — unique
-    per row, above every real payload (local indices < W), so they sort
-    last and the per-row capacity bound is untouched.
+    columns past the segment length hold (all-ones words, W + j) pads —
+    unique per row, above every real payload (local indices < W), so
+    they sort last and the per-row capacity bound is untouched.
     """
     n = x.shape[0]
     layout = _segment_layout(n, segment_offsets)
     _, _, w, valid, src, _, _ = layout
-    u = ops.to_sortable(x)
+    codec = codec_for(x.dtype, cfg.descending)
+    kw = codec.encode(x)
     validj = jnp.asarray(valid)
+    srcj = jnp.asarray(src)
     col = jnp.asarray(np.arange(max(w, 1)), jnp.int32)[None, :]
-    pk = jnp.where(validj, u[jnp.asarray(src)], _MAXU)
+    pkw = tuple(jnp.where(validj, u[srcj], _MAXU) for u in kw)
     pv = jnp.where(validj, col, jnp.int32(w) + col)
-    pk, pv, s_orig = _pad_rows(pk, pv, cfg)
-    sk, sv = _sort_canonical_packed(pk, pv, cfg, 2 * max(w, 1))
-    return sk[:s_orig], sv[:s_orig], layout
+    pkw, pv, s_orig = _pad_rows(pkw, pv, cfg)
+    skw, sv = _sort_canonical_packed(pkw, pv, cfg, 2 * max(w, 1))
+    return codec, tuple(u[:s_orig] for u in skw), sv[:s_orig], layout
 
 
 def segment_sort(x: jax.Array, segment_offsets,
                  cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
     """Sort each segment x[off[i]:off[i+1]] independently, in place.
 
-    segment_offsets must be host-known (python ints / numpy / concrete
-    array): the padded row width is a static shape.  Empty segments are
-    fine.  One launch for all segments; no element crosses a segment
-    boundary (tested).  Returns an array of x's shape.
+    Args:
+        x: 1-D array of any codec dtype (see :func:`sort`).
+        segment_offsets: host-known ints (python ints / numpy / concrete
+            array), non-decreasing, off[0] = 0, off[-1] = len(x): the
+            padded row width is a static shape.  Empty segments are fine.
+        cfg: pipeline knobs (``descending`` sorts every segment
+            descending).
+    Returns:
+        Array of x's shape; one launch for all segments; no element
+        crosses a segment boundary (tested).
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> from repro.core import bucket_sort
+        >>> bucket_sort.segment_sort(jnp.asarray([3, 1, 9, 7, 8]), [0, 2, 5])
+        Array([1, 3, 7, 8, 9], dtype=int32)
     """
     assert x.ndim == 1, x.shape
     n = x.shape[0]
     if n == 0:
         _segment_layout(n, segment_offsets)  # still validate offsets
         return x
-    sk, _, layout = _segment_sorted_packed(x, segment_offsets, cfg)
-    unpack_src = layout[5]
-    out_u = jnp.take(sk.reshape(-1), jnp.asarray(unpack_src))
-    return ops.from_sortable(out_u, x.dtype)
+    codec, skw, _, layout = _segment_sorted_packed(x, segment_offsets, cfg)
+    unpack = jnp.asarray(layout[5])
+    return codec.decode(tuple(jnp.take(u.reshape(-1), unpack) for u in skw))
 
 
 def segment_argsort(x: jax.Array, segment_offsets,
                     cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
     """Per-segment stable argsort with GLOBAL indices: out[off[i]:off[i+1]]
     is a permutation of [off[i], off[i+1]) and x[out] == segment_sort(x).
+
+    Args/Returns: as :func:`segment_sort`, but an int32 permutation.
     """
     assert x.ndim == 1, x.shape
     n = x.shape[0]
     if n == 0:
         _segment_layout(n, segment_offsets)
         return jnp.arange(0, dtype=jnp.int32)
-    _, sv, layout = _segment_sorted_packed(x, segment_offsets, cfg)
+    _, _, sv, layout = _segment_sorted_packed(x, segment_offsets, cfg)
     off, _, _, _, _, unpack_src, seg_of_pos = layout
     local = jnp.take(sv.reshape(-1), jnp.asarray(unpack_src))
     return jnp.asarray(off[seg_of_pos].astype(np.int32)) + local

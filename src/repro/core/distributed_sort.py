@@ -30,12 +30,18 @@ Overflow is therefore impossible; tests assert max fill <= C_pair.
 The result is returned padded-ragged: (out_cap,) keys/payloads per
 shard plus a valid-count — the natural output of a sample sort (global
 order = concatenation of valid prefixes in device order).
+
+Keys dispatch on the ``core/key_codec`` codecs like the single-device
+pipeline: ``make_sharded_sort`` accepts any codec dtype (64-bit keys
+travel as two uint32 words per element through every collective; x64
+mode required) and honors ``cfg.descending``.  ``sorted_shard`` itself
+operates on canonical words — a bare uint32 array or a tuple of word
+arrays, returned in the same structure.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -43,15 +49,24 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.bucket_sort import _sort_rows
+from repro.core.key_codec import codec_for
 from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, round_up
 from repro.kernels import ops
+from repro.kernels.bitonic import as_words, like_words
 
 _MAXU = jnp.uint32(0xFFFFFFFF)
 
 
 @dataclasses.dataclass(frozen=True)
 class DistSortSpec:
-    """Static geometry of a distributed sort (all trace-time ints)."""
+    """Static geometry of a distributed sort (all trace-time ints).
+
+    Attributes:
+        axis: mesh axis name (or tuple of names) the sort spans.
+        d: devices along the sort axis.
+        n_local: local shard length (pre-padding).
+        oversample: regular-sampling oversample factor c (bound above).
+    """
 
     axis: str | tuple[str, ...]
     d: int  # devices along the sort axis
@@ -89,66 +104,85 @@ class DistSortSpec:
         return min(round_up(self.b_t, 8), self.d * self.c_pair)
 
 
-def _local_sort(k, v, cfg, pad_base):
-    sk, sv, _ = _sort_rows(k[None, :], v[None, :], cfg, pad_base, None)
-    return sk[0], sv[0]
+def _local_sort(kw, v, cfg, pad_base):
+    skw, sv, _ = _sort_rows(
+        tuple(w[None, :] for w in kw), v[None, :], cfg, pad_base, None
+    )
+    return tuple(w[0] for w in skw), sv[0]
+
+
+def _deal_all_to_all(x, ax, d, n_pad):
+    """Deal: position p -> device p mod D (static transpose all_to_all)."""
+    x = jnp.swapaxes(x.reshape(n_pad // d, d), 0, 1)  # (D, n_pad/D) strided
+    return jax.lax.all_to_all(x, ax, split_axis=0, concat_axis=0, tiled=False)
 
 
 def sorted_shard(
-    keys_local: jax.Array,
+    keys_local,
     vals_local: jax.Array,
     spec: DistSortSpec,
     cfg: SortConfig = DEFAULT_CONFIG,
 ):
     """Distributed sort body — call INSIDE shard_map over ``spec.axis``.
 
-    keys_local: (n_local,) canonical uint32; vals_local: (n_local,) int32,
-    globally unique (use global indices).  Returns (keys (out_cap,),
-    vals (out_cap,), count ()) — valid prefix of each shard; shards
-    concatenated in device order form the globally sorted sequence.
+    Args:
+        keys_local: (n_local,) canonical uint32 key words — bare array
+            or tuple of word arrays (msw first, see ``core/key_codec``).
+        vals_local: (n_local,) int32 payloads, globally unique (use
+            global indices).
+        spec: static geometry (see :class:`DistSortSpec`).
+        cfg: pipeline knobs for the local sorts.
+    Returns:
+        (keys (out_cap,) in the input structure, vals (out_cap,),
+        count (), max_within ()) — valid prefix of each shard; shards
+        concatenated in device order form the globally sorted sequence.
     """
+    kw = as_words(keys_local)
     ax = spec.axis
     d, n_pad, s_loc, c_pair = spec.d, spec.n_pad, spec.s_loc, spec.c_pair
     n_glob = n_pad * d
     pad_base = n_glob  # payloads are global indices < n_glob
 
     me = jax.lax.axis_index(ax)
-    # Pad shard to a multiple of D with unique (MAXU, >= n_glob) pads.
-    n0 = keys_local.shape[0]
+    # Pad shard to a multiple of D with unique (all-ones, >= n_glob) pads.
+    n0 = kw[0].shape[0]
     pad_n = n_pad - n0
     if pad_n:
         pk = jnp.full((pad_n,), _MAXU, jnp.uint32)
         pv = n_glob + me * pad_n + jnp.arange(pad_n, dtype=jnp.int32)
-        keys_local = jnp.concatenate([keys_local, pk])
+        kw = tuple(jnp.concatenate([w, pk]) for w in kw)
         vals_local = jnp.concatenate([vals_local, pv])
+    v = vals_local
     pad_base += d * n_pad
 
     # 1. local sort
-    k, v = _local_sort(keys_local, vals_local, cfg, pad_base)
+    kw, v = _local_sort(kw, v, cfg, pad_base)
     pad_base += 4 * n_glob  # disjoint pad range headroom per phase
 
-    # 2. deal: position p -> device p mod D (static transpose all_to_all)
-    k = jnp.swapaxes(k.reshape(n_pad // d, d), 0, 1)  # (D, n_pad/D) strided
-    v = jnp.swapaxes(v.reshape(n_pad // d, d), 0, 1)
-    k = jax.lax.all_to_all(k, ax, split_axis=0, concat_axis=0, tiled=False)
-    v = jax.lax.all_to_all(v, ax, split_axis=0, concat_axis=0, tiled=False)
+    # 2. deal: one static all_to_all transpose per word + payload
+    kw = tuple(_deal_all_to_all(w, ax, d, n_pad).reshape(n_pad) for w in kw)
+    v = _deal_all_to_all(v, ax, d, n_pad).reshape(n_pad)
 
     # 3. local sort of dealt data
-    k, v = _local_sort(k.reshape(n_pad), v.reshape(n_pad), cfg, pad_base)
+    kw, v = _local_sort(kw, v, cfg, pad_base)
     pad_base += 4 * n_glob
 
     # 4. sampling -> replicated splitters (steps 3-5 of Algorithm 1)
     samp_idx = (jnp.arange(1, s_loc + 1, dtype=jnp.int32) * (n_pad // s_loc)) - 1
-    sk_all = jax.lax.all_gather(k[samp_idx], ax).reshape(d * s_loc)
+    skw_all = tuple(
+        jax.lax.all_gather(w[samp_idx], ax).reshape(d * s_loc) for w in kw
+    )
     sv_all = jax.lax.all_gather(v[samp_idx], ax).reshape(d * s_loc)
-    ssk, ssv = _local_sort(sk_all, sv_all, cfg, pad_base)
+    sskw, ssv = _local_sort(skw_all, sv_all, cfg, pad_base)
     pad_base += 4 * d * s_loc
     sp_idx = (jnp.arange(1, d, dtype=jnp.int32) * (d * s_loc)) // d
-    spk, spv = ssk[sp_idx], ssv[sp_idx]  # (D-1,) identical on every device
+    spkw = tuple(w[sp_idx] for w in sskw)  # (D-1,) identical on every device
+    spv = ssv[sp_idx]
 
     # 5. splitter ranks -> chunk geometry (steps 6-7)
     ranks = ops.splitter_ranks(
-        k[None, :], v[None, :], spk[None, :], spv[None, :],
+        tuple(w[None, :] for w in kw), v[None, :],
+        tuple(w[None, :] for w in spkw), spv[None, :],
         impl=cfg.impl, interpret=cfg.interpret,
     )[0]  # (D-1,) in [0, n_pad]
     starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), ranks])
@@ -158,19 +192,25 @@ def sorted_shard(
     # 6. scatter into the padded (D, C_pair) buffer, one static all_to_all
     pos = jnp.arange(n_pad, dtype=jnp.int32)
     ind = jnp.zeros((n_pad + 1,), jnp.int32).at[ranks].add(1)
-    chunk_id = jnp.cumsum(ind)[:n_pad]
+    chunk_id = jnp.cumsum(ind, dtype=jnp.int32)[:n_pad]
     within = pos - jnp.take(starts, chunk_id)
     max_within = jnp.max(within)  # bound check: < C_pair (tested)
     dest = chunk_id * c_pair + within
     dest = jnp.where(within < c_pair, dest, d * c_pair)
-    bk = jnp.full((d * c_pair,), _MAXU, jnp.uint32).at[dest].set(k, mode="drop")
+    bkw = tuple(
+        jnp.full((d * c_pair,), _MAXU, jnp.uint32).at[dest].set(w, mode="drop")
+        for w in kw
+    )
     bv = (
         jnp.int32(pad_base) + jnp.arange(d * c_pair, dtype=jnp.int32)
     ).at[dest].set(v, mode="drop")
     pad_base += d * d * c_pair
 
-    bk = jax.lax.all_to_all(
-        bk.reshape(d, c_pair), ax, split_axis=0, concat_axis=0, tiled=False
+    bkw = tuple(
+        jax.lax.all_to_all(
+            w.reshape(d, c_pair), ax, split_axis=0, concat_axis=0, tiled=False
+        )
+        for w in bkw
     )
     bv = jax.lax.all_to_all(
         bv.reshape(d, c_pair), ax, split_axis=0, concat_axis=0, tiled=False
@@ -180,17 +220,24 @@ def sorted_shard(
     ).reshape(d)
 
     # 7. local sort of the received buckets (step 9); reals sort before pads
-    fk, fv = _local_sort(
-        bk.reshape(d * c_pair), bv.reshape(d * c_pair), cfg, pad_base
+    fkw, fv = _local_sort(
+        tuple(w.reshape(d * c_pair) for w in bkw), bv.reshape(d * c_pair),
+        cfg, pad_base,
     )
     out_cap = spec.out_cap
-    count = jnp.sum(recv_counts)
+    count = jnp.sum(recv_counts, dtype=jnp.int32)
     # Padded shard elements (payload in [n_glob, n_glob + d*n_pad)) are real
     # inputs' pads: they sort after all true elements; exclude them.
     count = count - jnp.sum(
-        (fv[:out_cap] >= n_glob) & (fv[:out_cap] < n_glob + d * n_pad)
+        (fv[:out_cap] >= n_glob) & (fv[:out_cap] < n_glob + d * n_pad),
+        dtype=jnp.int32,
     )
-    return fk[:out_cap], fv[:out_cap], count, max_within
+    return (
+        like_words(tuple(w[:out_cap] for w in fkw), keys_local),
+        fv[:out_cap],
+        count,
+        max_within,
+    )
 
 
 def make_sharded_sort(
@@ -199,11 +246,20 @@ def make_sharded_sort(
 ):
     """Build a jit'd distributed argsort over ``axis`` of ``mesh``.
 
-    Returns fn: (keys (n_global,) sharded over axis) ->
-      (sorted_keys (D*out_cap,), payload_idx (D*out_cap,), counts (D,))
-    where the valid prefix of each shard (counts[i] elements) concatenated
-    in shard order is the globally sorted sequence; payloads are original
-    global indices (an argsort).
+    Args:
+        mesh: jax device mesh.
+        axis: mesh axis name (or tuple) to sort across; D = its size.
+        n_global: total key count (must divide by D).
+        cfg: pipeline knobs (``descending`` supported; keys of any codec
+            dtype — 64-bit needs x64 mode).
+        oversample: regular-sampling oversample factor.
+    Returns:
+        (fn, spec) where fn: (keys (n_global,) sharded over axis) ->
+          (sorted_keys (D*out_cap,), payload_idx (D*out_cap,),
+           counts (D,), max_within (D,))
+        and the valid prefix of each shard (counts[i] elements)
+        concatenated in shard order is the globally sorted sequence;
+        payloads are original global indices (an argsort).
     """
     axt = (axis,) if isinstance(axis, str) else tuple(axis)
     d = 1
@@ -217,11 +273,14 @@ def make_sharded_sort(
     def body(keys_local):
         n_loc = spec.n_local
         me = jax.lax.axis_index(axis)
-        u = ops.to_sortable(keys_local)
+        codec = codec_for(keys_local.dtype, cfg.descending)
+        kw = codec.encode(keys_local)
         gid = me * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
-        fk, fv, count, max_within = sorted_shard(u, gid, spec, cfg)
+        fkw, fv, count, max_within = sorted_shard(kw, gid, spec, cfg)
+        # Stack words into one (nw, out_cap) array so the shard_map
+        # out_specs stay structure-independent of the codec word count.
         return (
-            fk[None],
+            jnp.stack(fkw)[None],
             fv[None],
             count[None],
             max_within[None],
@@ -231,14 +290,19 @@ def make_sharded_sort(
 
     @jax.jit
     def run(keys):
-        fk, fv, counts, mw = shard_map(
+        codec = codec_for(keys.dtype, cfg.descending)
+        fkw, fv, counts, mw = shard_map(
             body,
             mesh=mesh,
             in_specs=(pspec,),
-            out_specs=(P(axt, None), P(axt, None), pspec, pspec),
+            out_specs=(P(axt, None, None), P(axt, None), pspec, pspec),
         )(keys)
+        # fkw: (D, nw, out_cap) -> per-word (D*out_cap,) flats -> decode
+        words = tuple(
+            fkw[:, i, :].reshape(-1) for i in range(codec.num_words)
+        )
         return (
-            ops.from_sortable(fk.reshape(-1), keys.dtype),
+            codec.decode(words),
             fv.reshape(-1),
             counts,
             mw,

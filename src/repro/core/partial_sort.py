@@ -9,9 +9,13 @@ and fully sort only the candidates.
 
 Work: O(n) tile sort + O((k+B) log(k+B))  vs  O(n log n) full sort.
 
-Everything here operates on "smallest-k of canonical uint32 keys";
-``topk`` feeds inverted keys so ties break toward the smaller index,
-matching jax.lax.top_k.
+Everything here operates on "smallest-k of canonical key words"; the
+public entries encode with a ``descending=True`` key codec
+(``core/key_codec``), under which ascending canonical order ==
+descending score order and ties break toward the smaller index,
+matching jax.lax.top_k.  All codec dtypes are supported (64-bit scores
+use two-word keys and need x64 mode); ``cfg.descending`` is ignored —
+top-k is descending by definition.
 
 ``topk_batched`` runs the same partial round on every row of a
 serving-shaped (B, vocab) batch in ONE launch (DESIGN.md §5): tiles of
@@ -28,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bucket_sort import _chunk_search
+from repro.core.key_codec import codec_for
 from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, next_pow2, round_up
 from repro.kernels import ops
 
@@ -35,56 +40,68 @@ _MAXU = jnp.uint32(0xFFFFFFFF)
 _IMAX = jnp.int32(2**31 - 1)
 
 
-def _pad_pow2(k2, v2):
-    r, length = k2.shape
+def _pad_pow2(kw, v2):
+    """Pad (r, L) words/payloads to the next power of two with
+    (all-ones, IMAX) pairs (sort last; never candidates)."""
+    r, length = kw[0].shape
     lp = next_pow2(length)
     if lp == length:
-        return k2, v2
+        return kw, v2
     pk = jnp.full((r, lp - length), _MAXU, jnp.uint32)
     pv = jnp.full((r, lp - length), _IMAX, jnp.int32)
-    return jnp.concatenate([k2, pk], 1), jnp.concatenate([v2, pv], 1)
-
-
-def _sort_small(k1, v1, cfg):
-    """Bitonic sort of a single row (pads with (MAXU, IMAX) go last)."""
-    n = k1.shape[0]
-    sk, sv = ops.sort_tiles(
-        *_pad_pow2(k1[None], v1[None]), impl=cfg.impl, interpret=cfg.interpret
+    return (
+        tuple(jnp.concatenate([w, pk], 1) for w in kw),
+        jnp.concatenate([v2, pv], 1),
     )
-    return sk[0, :n], sv[0, :n]
+
+
+def _sort_small(kw, v1, cfg):
+    """Bitonic sort of a single row (pads with (all-ones, IMAX) go last)."""
+    n = kw[0].shape[0]
+    skw, sv = ops.sort_tiles(
+        *_pad_pow2(tuple(w[None] for w in kw), v1[None]),
+        impl=cfg.impl, interpret=cfg.interpret,
+    )
+    return tuple(w[0, :n] for w in skw), sv[0, :n]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "cfg"))
-def _smallest_k(u, k: int, cfg: SortConfig):
-    """Ascending smallest-k of canonical keys; payload = original index."""
-    (n,) = u.shape
+def _smallest_k(kw, k: int, cfg: SortConfig):
+    """Ascending smallest-k of canonical key words; payload = original
+    index.  kw: tuple of (n,) uint32 word arrays (msw first)."""
+    (n,) = kw[0].shape
     t, s = cfg.tile, cfg.s
     lp = round_up(n, t)
     vals = jnp.arange(n, dtype=jnp.int32)
     if lp > n:  # pad with MAX pairs: never candidates for smallest-k
-        u = jnp.concatenate([u, jnp.full((lp - n,), _MAXU, jnp.uint32)])
+        kw = tuple(
+            jnp.concatenate([w, jnp.full((lp - n,), _MAXU, jnp.uint32)])
+            for w in kw
+        )
         vals = jnp.concatenate([vals, jnp.full((lp - n,), _IMAX, jnp.int32)])
     m = lp // t
 
     # steps 1-2: tile sort
-    tk, tv = ops.sort_tiles(
-        u.reshape(m, t), vals.reshape(m, t), impl=cfg.impl, interpret=cfg.interpret
+    tkw, tv = ops.sort_tiles(
+        tuple(w.reshape(m, t) for w in kw), vals.reshape(m, t),
+        impl=cfg.impl, interpret=cfg.interpret,
     )
 
     # steps 3-5: samples -> sorted samples -> s-1 splitters
     samp_idx = (jnp.arange(1, s + 1, dtype=jnp.int32) * (t // s)) - 1
-    sk, sv = _sort_small(
-        tk[:, samp_idx].reshape(m * s), tv[:, samp_idx].reshape(m * s), cfg
+    skw, sv = _sort_small(
+        tuple(w[:, samp_idx].reshape(m * s) for w in tkw),
+        tv[:, samp_idx].reshape(m * s), cfg,
     )
     sp_idx = (jnp.arange(1, s, dtype=jnp.int32) * (m * s)) // s
-    spk = jnp.broadcast_to(sk[sp_idx], (m, s - 1))
+    spkw = tuple(jnp.broadcast_to(w[sp_idx], (m, s - 1)) for w in skw)
     spv = jnp.broadcast_to(sv[sp_idx], (m, s - 1))
 
     # step 6: ranks
     ranks = ops.splitter_ranks(
-        tk, tv, spk, spv, impl=cfg.impl, interpret=cfg.interpret
+        tkw, tv, spkw, spv, impl=cfg.impl, interpret=cfg.interpret
     )  # (m, s-1)
-    glob_ranks = ranks.sum(axis=0)  # (s-1,)
+    glob_ranks = ranks.sum(axis=0, dtype=jnp.int32)  # (s-1,)
 
     # θ = smallest splitter with global rank >= k; candidates = elements < θ.
     # Bucket bound: candidate count < k + cap.  If no splitter qualifies,
@@ -104,34 +121,53 @@ def _smallest_k(u, k: int, cfg: SortConfig):
     )  # (m,) elements of tile i below θ (or all)
 
     # candidate gather: global candidate slot = (#cands in earlier tiles) + pos
-    tile_excl = jnp.cumsum(tile_rank) - tile_rank
+    tile_excl = jnp.cumsum(tile_rank, dtype=jnp.int32) - tile_rank
     pos = jax.lax.broadcasted_iota(jnp.int32, (m, t), 1)
     is_cand = pos < tile_rank[:, None]
     within = tile_excl[:, None] + pos
-    dest = jnp.where(is_cand & (within < ccap), within, ccap)
-    ck = jnp.full((ccap + 1,), _MAXU, jnp.uint32)
+    dest = jnp.where(is_cand & (within < ccap), within, ccap).reshape(-1)
+    ckw = tuple(
+        jnp.full((ccap + 1,), _MAXU, jnp.uint32)
+        .at[dest].set(w.reshape(-1), mode="drop")[:ccap]
+        for w in tkw
+    )
     cv = jnp.full((ccap + 1,), _IMAX, jnp.int32)
-    ck = ck.at[dest.reshape(-1)].set(tk.reshape(-1), mode="drop")[:ccap]
-    cv = cv.at[dest.reshape(-1)].set(tv.reshape(-1), mode="drop")[:ccap]
+    cv = cv.at[dest].set(tv.reshape(-1), mode="drop")[:ccap]
 
-    fk, fv = _sort_small(ck, cv, cfg)
-    return fk[:k], fv[:k]
+    fkw, fv = _sort_small(ckw, cv, cfg)
+    return tuple(w[:k] for w in fkw), fv[:k]
 
 
 def topk(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
     """Top-k (descending) values + original indices of 1-D x.
 
-    Ties break toward the smaller index (matches jax.lax.top_k).
+    Args:
+        x: 1-D scores in any codec dtype (int/uint/float 8..64-bit,
+            bool; 64-bit needs x64 mode — see ``core/key_codec``).
+        k: 1 <= k <= len(x).
+        cfg: pipeline knobs (``cfg.descending`` is ignored: top-k is
+            descending by definition).
+    Returns:
+        (values (k,) in x.dtype, indices (k,) int32); ties break toward
+        the smaller index (matches jax.lax.top_k).
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> from repro.core import partial_sort
+        >>> v, i = partial_sort.topk(jnp.asarray([1.0, 9.0, 4.0, 9.0]), 2)
+        >>> v, i
+        (Array([9., 9.], dtype=float32), Array([1, 3], dtype=int32))
     """
     n = x.shape[0]
     assert 1 <= k <= n
-    u = ~ops.to_sortable(x)  # ascending u == descending x
+    codec = codec_for(x.dtype, descending=True)
+    kw = codec.encode(x)  # ascending canonical == descending score
     if n <= cfg.direct_max:
-        fk, fv = _sort_small(u, jnp.arange(n, dtype=jnp.int32), cfg)
-        fk, fv = fk[:k], fv[:k]
+        fkw, fv = _sort_small(kw, jnp.arange(n, dtype=jnp.int32), cfg)
+        fkw, fv = tuple(w[:k] for w in fkw), fv[:k]
     else:
-        fk, fv = _smallest_k(u, k, cfg)
-    return ops.from_sortable(~fk, x.dtype), fv
+        fkw, fv = _smallest_k(kw, k, cfg)
+    return codec.decode(fkw), fv
 
 
 # ----------------------------------------------------------------------
@@ -139,28 +175,31 @@ def topk(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
 # ----------------------------------------------------------------------
 
 
-def _sort_small_rows(k2, v2, cfg):
-    """Bitonic sort of each row of (r, L) (pads with (MAXU, IMAX) last)."""
-    n = k2.shape[1]
-    sk, sv = ops.sort_tiles(
-        *_pad_pow2(k2, v2), impl=cfg.impl, interpret=cfg.interpret,
+def _sort_small_rows(kw, v2, cfg):
+    """Bitonic sort of each row of (r, L) (pads with (all-ones, IMAX) last)."""
+    n = kw[0].shape[1]
+    skw, sv = ops.sort_tiles(
+        *_pad_pow2(kw, v2), impl=cfg.impl, interpret=cfg.interpret,
         block_rows=cfg.block_rows,
     )
-    return sk[:, :n], sv[:, :n]
+    return tuple(w[:, :n] for w in skw), sv[:, :n]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "cfg"))
-def _smallest_k_rows(u, k: int, cfg: SortConfig):
-    """Per-row ascending smallest-k of (B, n) canonical keys; payload =
-    original column index.  One bucket round for the whole batch; the
-    threshold θ and candidate set are per row."""
-    b, n = u.shape
+def _smallest_k_rows(kw, k: int, cfg: SortConfig):
+    """Per-row ascending smallest-k of (B, n) canonical key words;
+    payload = original column index.  One bucket round for the whole
+    batch; the threshold θ and candidate set are per row."""
+    b, n = kw[0].shape
     t, s = cfg.tile, cfg.s
     lp = round_up(n, t)
     vals = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
     if lp > n:  # pad with MAX pairs: never candidates for smallest-k
-        u = jnp.concatenate(
-            [u, jnp.full((b, lp - n), _MAXU, jnp.uint32)], axis=1
+        kw = tuple(
+            jnp.concatenate(
+                [w, jnp.full((b, lp - n), _MAXU, jnp.uint32)], axis=1
+            )
+            for w in kw
         )
         vals = jnp.concatenate(
             [vals, jnp.full((b, lp - n), _IMAX, jnp.int32)], axis=1
@@ -168,26 +207,27 @@ def _smallest_k_rows(u, k: int, cfg: SortConfig):
     m = lp // t
 
     # steps 1-2: tile sort, all rows' tiles in one launch
-    tk, tv = ops.sort_tiles(
-        u.reshape(b * m, t), vals.reshape(b * m, t),
+    tkw, tv = ops.sort_tiles(
+        tuple(w.reshape(b * m, t) for w in kw), vals.reshape(b * m, t),
         impl=cfg.impl, interpret=cfg.interpret, block_rows=cfg.block_rows,
     )
 
     # steps 3-5: per-row samples -> sorted sample rows -> s-1 splitters
     samp_idx = (jnp.arange(1, s + 1, dtype=jnp.int32) * (t // s)) - 1
-    ssk, ssv = _sort_small_rows(
-        tk[:, samp_idx].reshape(b, m * s), tv[:, samp_idx].reshape(b, m * s),
+    sskw, ssv = _sort_small_rows(
+        tuple(w[:, samp_idx].reshape(b, m * s) for w in tkw),
+        tv[:, samp_idx].reshape(b, m * s),
         cfg,
     )
     sp_idx = (jnp.arange(1, s, dtype=jnp.int32) * (m * s)) // s
-    spk_t = jnp.repeat(ssk[:, sp_idx], m, axis=0)  # (b*m, s-1)
-    spv_t = jnp.repeat(ssv[:, sp_idx], m, axis=0)
+    spkw_t = tuple(jnp.repeat(w[:, sp_idx], m, axis=0) for w in sskw)
+    spv_t = jnp.repeat(ssv[:, sp_idx], m, axis=0)  # (b*m, s-1)
 
     # step 6: ranks, reduced per row
     ranks = ops.splitter_ranks(
-        tk, tv, spk_t, spv_t, impl=cfg.impl, interpret=cfg.interpret
+        tkw, tv, spkw_t, spv_t, impl=cfg.impl, interpret=cfg.interpret
     ).reshape(b, m, s - 1)
-    glob_ranks = ranks.sum(axis=1)  # (b, s-1)
+    glob_ranks = ranks.sum(axis=1, dtype=jnp.int32)  # (b, s-1)
 
     # Per-row θ: smallest splitter with global rank >= k (see _smallest_k
     # for why ccap always covers the candidate count).
@@ -205,22 +245,24 @@ def _smallest_k_rows(u, k: int, cfg: SortConfig):
     # Scatter-free candidate pack: slot p of row q reads the tile whose
     # candidate-count prefix interval covers p, at its first tile_rank
     # positions (the candidates are a sorted tile's prefix).
-    tile_excl = jnp.cumsum(tile_rank, axis=1) - tile_rank  # (b, m) excl.
-    total = tile_rank.sum(axis=1)  # (b,)
+    tile_excl = jnp.cumsum(tile_rank, axis=1, dtype=jnp.int32) - tile_rank
+    total = tile_rank.sum(axis=1, dtype=jnp.int32)  # (b,)
     p = jax.lax.broadcasted_iota(jnp.int32, (b, ccap), 1)
     src_tile = _chunk_search(tile_excl, p)  # (b, ccap)
     src_off = jnp.take_along_axis(tile_excl, src_tile, axis=1)
     row_base = jax.lax.broadcasted_iota(jnp.int32, (b, ccap), 0) * m
     src = (row_base + src_tile) * t + (p - src_off)
     valid = p < total[:, None]
-    src = jnp.where(valid, src, 0)
-    ck = jnp.where(valid, jnp.take(tk.reshape(-1), src.reshape(-1)
-                                   ).reshape(b, ccap), _MAXU)
-    cv = jnp.where(valid, jnp.take(tv.reshape(-1), src.reshape(-1)
-                                   ).reshape(b, ccap), _IMAX)
+    src = jnp.where(valid, src, 0).reshape(-1)
+    ckw = tuple(
+        jnp.where(valid, jnp.take(w.reshape(-1), src).reshape(b, ccap), _MAXU)
+        for w in tkw
+    )
+    cv = jnp.where(valid, jnp.take(tv.reshape(-1), src).reshape(b, ccap),
+                   _IMAX)
 
-    fk, fv = _sort_small_rows(ck, cv, cfg)
-    return fk[:, :k], fv[:, :k]
+    fkw, fv = _sort_small_rows(ckw, cv, cfg)
+    return tuple(w[:, :k] for w in fkw), fv[:, :k]
 
 
 def topk_batched(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
@@ -229,17 +271,25 @@ def topk_batched(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
     Equivalent to ``jax.lax.top_k(x, k)`` (ties toward the smaller
     index) but via the partial deterministic sample sort, one launch for
     the whole batch — the serving shape: (batch, vocab) logits.
+
+    Args:
+        x: (B, C) scores in any codec dtype (see :func:`topk`).
+        k: 1 <= k <= C.
+        cfg: pipeline knobs (``descending`` ignored, see :func:`topk`).
+    Returns:
+        (values (B, k) in x.dtype, indices (B, k) int32).
     """
     assert x.ndim == 2, x.shape
     b, n = x.shape
     assert 1 <= k <= n
     if b == 0:
         return (jnp.zeros((0, k), x.dtype), jnp.zeros((0, k), jnp.int32))
-    u = ~ops.to_sortable(x)  # ascending u == descending x
+    codec = codec_for(x.dtype, descending=True)
+    kw = codec.encode(x)  # ascending canonical == descending score
     if n <= cfg.direct_max:
         vals = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
-        fk, fv = _sort_small_rows(u, vals, cfg)
-        fk, fv = fk[:, :k], fv[:, :k]
+        fkw, fv = _sort_small_rows(kw, vals, cfg)
+        fkw, fv = tuple(w[:, :k] for w in fkw), fv[:, :k]
     else:
-        fk, fv = _smallest_k_rows(u, k, cfg)
-    return ops.from_sortable(~fk, x.dtype), fv
+        fkw, fv = _smallest_k_rows(kw, k, cfg)
+    return codec.decode(fkw), fv

@@ -6,6 +6,13 @@ import dataclasses
 
 
 def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (trace-time int; next_pow2(0) == 1).
+
+    Args:
+        x: non-negative python int.
+    Returns:
+        The next power of two, as a python int.
+    """
     p = 1
     while p < x:
         p *= 2
@@ -13,6 +20,14 @@ def next_pow2(x: int) -> int:
 
 
 def round_up(x: int, mult: int) -> int:
+    """Round x up to the nearest multiple of mult (trace-time ints).
+
+    Args:
+        x: non-negative python int.
+        mult: positive python int.
+    Returns:
+        Smallest multiple of ``mult`` >= x, as a python int.
+    """
     return ((x + mult - 1) // mult) * mult
 
 
@@ -44,6 +59,14 @@ class SortConfig:
         scatters anywhere on the hot path (DESIGN.md §4).  "scatter" is
         the legacy destination-scatter formulation, kept as a reference
         for tests and benchmarks.
+    descending: sort every key sequence in DESCENDING order.  A pure
+        codec-level switch (DESIGN.md §6): keys are encoded with the
+        order-reversing complement codec and the pipeline runs
+        unchanged, so descending costs nothing and stays stable (equal
+        keys keep their input order, matching
+        ``jnp.sort(x, descending=True)``).  Ignored by ``topk`` (top-k
+        is descending by definition) and by the ``*_with_stats`` bound
+        introspection (bounds are order-agnostic).
     row_pad: batch-aware block_rows auto-pick (DESIGN.md §5).  The
         batched entry points (``sort_batched``, ``segment_sort``) pad
         the row count up to a multiple of this power of two before
@@ -64,6 +87,7 @@ class SortConfig:
     fuse_sampling: bool = True
     fuse_ranking: bool = True
     relocation: str = "gather"
+    descending: bool = False
     row_pad: int = 8
 
     def __post_init__(self):

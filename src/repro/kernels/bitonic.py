@@ -21,17 +21,25 @@ Layout notes (target = TPU v5e; see DESIGN.md §3):
     d < 128 become intra-lane shuffles; Mosaic handles them, and a
     production-tuned variant would switch to sublane rotates there —
     that is a lowering detail, not an algorithmic one.
-  * Comparison is LEXICOGRAPHIC on (key, value).  The caller passes the
-    original element index as the value, which (a) makes every compared
-    pair unique so the regular-sampling bucket bound ≤ 2n/s holds for
-    any duplicate distribution, and (b) makes the sort STABLE.
+  * Comparison is LEXICOGRAPHIC on ``(*key_words, value)``.  Keys are
+    tuples of canonical uint32 words, most significant first (one word
+    for <= 32-bit dtypes, two for 64-bit — see ``core/key_codec``); the
+    caller passes the original element index as the value, which (a)
+    makes every compared pair unique so the regular-sampling bucket
+    bound ≤ 2n/s holds for any duplicate distribution, and (b) makes
+    the sort STABLE.  The compare cost is one extra vector cmp+select
+    chain per extra word (DESIGN.md §6), data movement scales with the
+    word count.
   * Step 3 of the algorithm (equidistant sample extraction) is FUSED
     into the kernel as an optional epilogue output: the s per-tile
     samples are the last element of each T/s chunk of the sorted row,
     a pure reshape + slice while the block is still VMEM-resident.
     This removes one full HBM read of the sorted tiles (DESIGN.md §3).
 
-Keys are canonical uint32 (see ``ops.to_sortable``); values are int32.
+Keys: one or more canonical uint32 word arrays; values: int32.  Every
+public entry accepts either a bare ``(m, T)`` uint32 array (the one-word
+fast path, bit-compatible with the pre-codec API) or a tuple of word
+arrays, and returns keys in the same structure.
 """
 
 from __future__ import annotations
@@ -43,102 +51,156 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# VMEM budget for one grid program's block: in + out, keys + values
-# (4 buffers of block_rows * T * 4 bytes).  8 MiB of the ~16 MiB/core
-# leaves headroom for the network's double-buffered temporaries.
+# VMEM budget for one grid program's block: in + out, key words + values
+# (2*(num_words+1) buffers of block_rows * T * 4 bytes).  8 MiB of the
+# ~16 MiB/core leaves headroom for the network's double-buffered
+# temporaries.
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
 
-def _compare_exchange(keys, vals, d: int, size: int):
-    """One bitonic compare-exchange pass at stride ``d`` within ``size`` blocks.
+def as_words(keys) -> tuple[jax.Array, ...]:
+    """Normalize a key argument to a tuple of uint32 word arrays.
 
-    keys/vals: 1-D arrays of length T (power of two).  Element i is paired
-    with i ^ d; direction is ascending iff (i & size) == 0.
+    Args:
+        keys: a single uint32 array (one-word keys) or a tuple/list of
+            uint32 word arrays, most significant first.
+    Returns:
+        Tuple of word arrays (length >= 1, all the same shape).
     """
-    t = keys.shape[0]
+    if isinstance(keys, (tuple, list)):
+        assert len(keys) >= 1
+        return tuple(keys)
+    return (keys,)
+
+
+def like_words(words: tuple[jax.Array, ...], keys):
+    """Return ``words`` in the structure of the original ``keys`` arg:
+    a bare array if the caller passed one, else a tuple."""
+    if isinstance(keys, (tuple, list)):
+        return tuple(words)
+    assert len(words) == 1
+    return words[0]
+
+
+def lex_gt(lo_parts, hi_parts):
+    """Elementwise lexicographic ``lo > hi`` over parallel word lists.
+
+    lo_parts/hi_parts: equal-length sequences of arrays compared word by
+    word, most significant first (the caller appends the payload as the
+    final word).  Returns a bool array of the common shape.
+    """
+    gt = lo_parts[0] > hi_parts[0]
+    eq = lo_parts[0] == hi_parts[0]
+    for a, b in zip(lo_parts[1:], hi_parts[1:]):
+        gt = gt | (eq & (a > b))
+        eq = eq & (a == b)
+    return gt
+
+
+def _compare_exchange(parts, d: int, size: int):
+    """One bitonic compare-exchange pass at stride ``d`` within ``size``
+    blocks, applied jointly to every array in ``parts`` (key words +
+    payload, 1-D, length T a power of two).  Element i is paired with
+    i ^ d; direction is ascending iff (i & size) == 0.
+    """
+    t = parts[0].shape[0]
     nb = t // (2 * d)
-    k3 = keys.reshape(nb, 2, d)
-    v3 = vals.reshape(nb, 2, d)
+    r3 = [p.reshape(nb, 2, d) for p in parts]
     # Global index of the low element of block b is 2*b*d (+ lane offset < d),
     # and d <= size/2, so bit log2(size) is decided purely by the block id.
     blk = jax.lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
     asc = ((2 * blk * d) & size) == 0  # (nb, 1) bool
 
-    klo, khi = k3[:, 0, :], k3[:, 1, :]
-    vlo, vhi = v3[:, 0, :], v3[:, 1, :]
-    gt = (klo > khi) | ((klo == khi) & (vlo > vhi))  # lexicographic
+    los = [p[:, 0, :] for p in r3]
+    his = [p[:, 1, :] for p in r3]
+    gt = lex_gt(los, his)
     swap = jnp.where(asc, gt, ~gt)
-
-    nk_lo = jnp.where(swap, khi, klo)
-    nk_hi = jnp.where(swap, klo, khi)
-    nv_lo = jnp.where(swap, vhi, vlo)
-    nv_hi = jnp.where(swap, vlo, vhi)
-
-    keys = jnp.stack((nk_lo, nk_hi), axis=1).reshape(t)
-    vals = jnp.stack((nv_lo, nv_hi), axis=1).reshape(t)
-    return keys, vals
+    return tuple(
+        jnp.stack(
+            (jnp.where(swap, hi, lo), jnp.where(swap, lo, hi)), axis=1
+        ).reshape(t)
+        for lo, hi in zip(los, his)
+    )
 
 
 def bitonic_network(keys, vals):
     """Full bitonic sorting network on 1-D (keys, vals); T = power of two.
+
+    Args:
+        keys: uint32 word array (or tuple of word arrays, msw first).
+        vals: int32 payload array, same length T (a power of two).
+    Returns:
+        (sorted keys in the input structure, sorted vals),
+        lexicographically ascending on (*words, payload).
 
     Unrolled at trace time: log2(T)*(log2(T)+1)/2 vectorized passes.
     Kept as the 1-D reference formulation (and the per-tile baseline in
     ``benchmarks/step_breakdown.py``); the kernel path uses the row-
     blocked :func:`bitonic_network_rows`.
     """
-    t = keys.shape[0]
+    words = as_words(keys)
+    t = words[0].shape[0]
     assert t & (t - 1) == 0, f"tile size {t} must be a power of two"
+    parts = words + (vals,)
     size = 2
     while size <= t:
         d = size // 2
         while d >= 1:
-            keys, vals = _compare_exchange(keys, vals, d, size)
+            parts = _compare_exchange(parts, d, size)
             d //= 2
         size *= 2
-    return keys, vals
+    return like_words(parts[:-1], keys), parts[-1]
 
 
 # --- Row-wise bitonic along the last axis: shared by the blocked tile-sort
 # --- kernel, the top-k kernel, and the pure-jnp reference path.
 
 
-def _row_compare_exchange(keys, vals, d: int, size: int):
-    """Compare-exchange along the LAST axis of (..., C) arrays."""
-    c = keys.shape[-1]
-    lead = keys.shape[:-1]
+def _row_compare_exchange(parts, d: int, size: int):
+    """Compare-exchange along the LAST axis of (..., C) arrays, applied
+    jointly to every array in ``parts`` (key words + payload)."""
+    c = parts[0].shape[-1]
+    lead = parts[0].shape[:-1]
     nb = c // (2 * d)
-    k3 = keys.reshape(lead + (nb, 2, d))
-    v3 = vals.reshape(lead + (nb, 2, d))
+    r3 = [p.reshape(lead + (nb, 2, d)) for p in parts]
     blk = jax.lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
     asc = ((2 * blk * d) & size) == 0  # (nb, 1), broadcasts over leading dims
 
-    klo, khi = k3[..., 0, :], k3[..., 1, :]
-    vlo, vhi = v3[..., 0, :], v3[..., 1, :]
-    gt = (klo > khi) | ((klo == khi) & (vlo > vhi))
+    los = [p[..., 0, :] for p in r3]
+    his = [p[..., 1, :] for p in r3]
+    gt = lex_gt(los, his)
     swap = jnp.where(asc, gt, ~gt)
-
-    nk = jnp.stack(
-        (jnp.where(swap, khi, klo), jnp.where(swap, klo, khi)), axis=-2
-    ).reshape(lead + (c,))
-    nv = jnp.stack(
-        (jnp.where(swap, vhi, vlo), jnp.where(swap, vlo, vhi)), axis=-2
-    ).reshape(lead + (c,))
-    return nk, nv
+    return tuple(
+        jnp.stack(
+            (jnp.where(swap, hi, lo), jnp.where(swap, lo, hi)), axis=-2
+        ).reshape(lead + (c,))
+        for lo, hi in zip(los, his)
+    )
 
 
 def bitonic_network_rows(keys, vals):
-    """Bitonic sort along the last axis of (..., C); C = power of two."""
-    c = keys.shape[-1]
+    """Bitonic sort along the last axis of (..., C); C = power of two.
+
+    Args:
+        keys: uint32 word array (or tuple of word arrays, msw first),
+            shape (..., C).
+        vals: int32 payload, same shape.
+    Returns:
+        (sorted keys in the input structure, sorted vals): every row
+        ascending in the lexicographic (*words, payload) order.
+    """
+    words = as_words(keys)
+    c = words[0].shape[-1]
     assert c & (c - 1) == 0, f"row width {c} must be a power of two"
+    parts = words + (vals,)
     size = 2
     while size <= c:
         d = size // 2
         while d >= 1:
-            keys, vals = _row_compare_exchange(keys, vals, d, size)
+            parts = _row_compare_exchange(parts, d, size)
             d //= 2
         size *= 2
-    return keys, vals
+    return like_words(parts[:-1], keys), parts[-1]
 
 
 def largest_pow2_divisor(m: int, limit: int) -> int:
@@ -154,66 +216,86 @@ def largest_pow2_divisor(m: int, limit: int) -> int:
 
 
 def auto_block_rows(
-    m: int, t: int, vmem_budget_bytes: int = _VMEM_BUDGET_BYTES
+    m: int, t: int, vmem_budget_bytes: int = _VMEM_BUDGET_BYTES,
+    num_words: int = 1,
 ) -> int:
     """Largest power-of-two divisor of ``m`` whose (block_rows, T) block
-    (4 x uint32/int32 buffers: in/out keys/values) fits the VMEM budget."""
-    return largest_pow2_divisor(m, max(vmem_budget_bytes // (4 * 4 * t), 1))
+    fits the VMEM budget.
+
+    Args:
+        m: tile count.
+        t: tile width.
+        vmem_budget_bytes: VMEM to fill (default 8 MiB).
+        num_words: uint32 key words per element; the block holds
+            2*(num_words+1) buffers (in+out, words+values) of
+            block_rows*T*4 bytes each.
+    """
+    per_row = 2 * (num_words + 1) * 4 * t
+    return largest_pow2_divisor(m, max(vmem_budget_bytes // per_row, 1))
 
 
-def effective_block_rows(m: int, t: int, block_rows: int | None) -> int:
+def effective_block_rows(
+    m: int, t: int, block_rows: int | None, num_words: int = 1
+) -> int:
     """Resolve a requested block_rows against an actual tile count: None
     = auto VMEM fill; an explicit power of two is an UPPER BOUND, clamped
     to the largest power-of-two divisor of ``m`` (recursion levels with
     odd row counts degrade gracefully to smaller blocks)."""
     if block_rows is None:
-        return auto_block_rows(m, t)
+        return auto_block_rows(m, t, num_words=num_words)
     assert block_rows >= 1 and block_rows & (block_rows - 1) == 0, block_rows
     return largest_pow2_divisor(m, block_rows)
 
 
-def _bitonic_block_kernel(k_ref, v_ref, ko_ref, vo_ref, *rest, num_samples: int):
-    keys = k_ref[...]  # (block_rows, T)
-    vals = v_ref[...]
-    keys, vals = bitonic_network_rows(keys, vals)
-    ko_ref[...] = keys
-    vo_ref[...] = vals
+def _bitonic_block_kernel(*refs, num_words: int, num_samples: int):
+    """Kernel body: refs = num_words+1 inputs (key words + vals),
+    num_words+1 outputs, and num_words+1 sample outputs iff sampling."""
+    nw1 = num_words + 1
+    in_refs, out_refs = refs[:nw1], refs[nw1:2 * nw1]
+    words = tuple(r[...] for r in in_refs[:num_words])  # (block_rows, T) each
+    vals = in_refs[num_words][...]
+    words, vals = bitonic_network_rows(words, vals)
+    for r, w in zip(out_refs, words + (vals,)):
+        r[...] = w
     if num_samples:
-        sk_ref, sv_ref = rest
-        b, t = keys.shape
+        samp_refs = refs[2 * nw1:]
+        b, t = vals.shape
         chunk = t // num_samples
         # Sample j of a sorted row is element (j+1)*T/s - 1 == the last
         # element of chunk j — a reshape + slice, no gather needed.
-        sk_ref[...] = keys.reshape(b, num_samples, chunk)[:, :, -1]
-        sv_ref[...] = vals.reshape(b, num_samples, chunk)[:, :, -1]
+        for r, w in zip(samp_refs, words + (vals,)):
+            r[...] = w.reshape(b, num_samples, chunk)[:, :, -1]
 
 
-def _sort_tiles_call(keys, vals, num_samples: int, block_rows, interpret: bool):
-    m, t = keys.shape
+def _sort_tiles_call(words, vals, num_samples: int, block_rows,
+                     interpret: bool):
+    nw = len(words)
+    m, t = words[0].shape
     assert vals.shape == (m, t)
-    assert keys.dtype == jnp.uint32 and vals.dtype == jnp.int32
-    block_rows = effective_block_rows(m, t, block_rows)
+    assert all(w.dtype == jnp.uint32 and w.shape == (m, t) for w in words)
+    assert vals.dtype == jnp.int32
+    block_rows = effective_block_rows(m, t, block_rows, num_words=nw)
     if num_samples:
         assert t % num_samples == 0, (t, num_samples)
 
     grid = (m // block_rows,)
     blk = pl.BlockSpec((block_rows, t), lambda i: (i, 0))
-    out_specs = [blk, blk]
-    out_shape = [
-        jax.ShapeDtypeStruct((m, t), jnp.uint32),
-        jax.ShapeDtypeStruct((m, t), jnp.int32),
+    in_specs = [blk] * (nw + 1)
+    out_specs = [blk] * (nw + 1)
+    out_shape = [jax.ShapeDtypeStruct((m, t), jnp.uint32)] * nw + [
+        jax.ShapeDtypeStruct((m, t), jnp.int32)
     ]
     if num_samples:
         sblk = pl.BlockSpec((block_rows, num_samples), lambda i: (i, 0))
-        out_specs += [sblk, sblk]
-        out_shape += [
-            jax.ShapeDtypeStruct((m, num_samples), jnp.uint32),
-            jax.ShapeDtypeStruct((m, num_samples), jnp.int32),
-        ]
+        out_specs += [sblk] * (nw + 1)
+        out_shape += [jax.ShapeDtypeStruct((m, num_samples), jnp.uint32)] * nw
+        out_shape += [jax.ShapeDtypeStruct((m, num_samples), jnp.int32)]
     return pl.pallas_call(
-        functools.partial(_bitonic_block_kernel, num_samples=num_samples),
+        functools.partial(
+            _bitonic_block_kernel, num_words=nw, num_samples=num_samples
+        ),
         grid=grid,
-        in_specs=[blk, blk],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         # Blocks are independent: let Mosaic parallelize the grid axis.
@@ -221,12 +303,12 @@ def _sort_tiles_call(keys, vals, num_samples: int, block_rows, interpret: bool):
             dimension_semantics=("parallel",)
         ),
         interpret=interpret,
-    )(keys, vals)
+    )(*words, vals)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def sort_tiles_kv(
-    keys: jax.Array,
+    keys,
     vals: jax.Array,
     *,
     block_rows: int | None = None,
@@ -234,22 +316,27 @@ def sort_tiles_kv(
 ):
     """Sort each row of (m, T) keys/vals independently, lexicographically.
 
-    keys: uint32 canonical sort keys, shape (m, T), T a power of two.
-    vals: int32 payload (original indices for stability), same shape.
-    block_rows: tiles sorted per grid program (None = auto VMEM fill;
-        explicit values are clamped, see :func:`effective_block_rows`).
-        ``block_rows=1`` reproduces the per-tile baseline layout.
-    Returns (sorted_keys, sorted_vals), each row ascending.
+    Args:
+        keys: uint32 canonical sort-key words — a single (m, T) array or
+            a tuple of word arrays (msw first), T a power of two.
+        vals: int32 payload (original indices for stability), same shape.
+        block_rows: tiles sorted per grid program (None = auto VMEM fill;
+            explicit values are clamped, see :func:`effective_block_rows`).
+            ``block_rows=1`` reproduces the per-tile baseline layout.
+    Returns:
+        (sorted_keys in the input structure, sorted_vals), each row
+        ascending in the lexicographic (*words, payload) order.
     """
-    sk, sv = _sort_tiles_call(keys, vals, 0, block_rows, interpret)
-    return sk, sv
+    words = as_words(keys)
+    out = _sort_tiles_call(words, vals, 0, block_rows, interpret)
+    return like_words(tuple(out[:-1]), keys), out[-1]
 
 
 @functools.partial(
     jax.jit, static_argnames=("num_samples", "block_rows", "interpret")
 )
 def sort_tiles_sample_kv(
-    keys: jax.Array,
+    keys,
     vals: jax.Array,
     *,
     num_samples: int,
@@ -258,9 +345,22 @@ def sort_tiles_sample_kv(
 ):
     """Row-blocked tile sort with Step-3 sample extraction fused in.
 
-    Returns (sorted_keys (m, T), sorted_vals (m, T),
-             sample_keys (m, s), sample_vals (m, s)) where sample j of
-    row i is sorted element (j+1)*T/s - 1 — the paper's s equidistant
-    local samples — emitted while the sorted block is still in VMEM.
+    Args:
+        keys/vals/block_rows: as :func:`sort_tiles_kv`.
+        num_samples: s equidistant samples per sorted tile; must divide T.
+    Returns:
+        (sorted_keys (m, T), sorted_vals (m, T),
+         sample_keys (m, s), sample_vals (m, s)) — keys in the input
+        structure; sample j of row i is sorted element (j+1)*T/s - 1,
+        the paper's s equidistant local samples, emitted while the
+        sorted block is still in VMEM.
     """
-    return tuple(_sort_tiles_call(keys, vals, num_samples, block_rows, interpret))
+    words = as_words(keys)
+    nw = len(words)
+    out = _sort_tiles_call(words, vals, num_samples, block_rows, interpret)
+    return (
+        like_words(tuple(out[:nw]), keys),
+        out[nw],
+        like_words(tuple(out[nw + 1:2 * nw + 1]), keys),
+        out[2 * nw + 1],
+    )

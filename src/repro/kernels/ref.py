@@ -4,6 +4,11 @@ These are the ground truth the kernels are validated against in tests
 (interpret=True vs ref, swept over shapes/dtypes + hypothesis).  They are
 also the implementation used on the ``impl="xla"`` path (dry-run compiles
 with 512 host devices, where emulated Pallas would bloat the HLO).
+
+Like the kernels, every entry accepts keys as a bare uint32 array (the
+one-word fast path) or a tuple of canonical uint32 word arrays (msw
+first, see ``core/key_codec``); comparison is lexicographic on
+``(*words, payload)`` via ``lax.sort(num_keys=len(words)+1)``.
 """
 
 from __future__ import annotations
@@ -11,52 +16,97 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-
-def sort_tiles_kv(keys: jax.Array, vals: jax.Array):
-    """Lexicographic (key, value) ascending sort of each row of (m, T)."""
-    return jax.lax.sort((keys, vals), dimension=-1, num_keys=2)
+from repro.kernels.bitonic import as_words, like_words
 
 
-def sort_tiles_sample_kv(keys: jax.Array, vals: jax.Array, *, num_samples: int):
+def sort_tiles_kv(keys, vals: jax.Array):
+    """Lexicographic (*key_words, value) ascending sort of each row of (m, T).
+
+    Args:
+        keys: (m, T) uint32 word array or tuple of word arrays (msw first).
+        vals: (m, T) int32 payloads.
+    Returns:
+        (sorted keys in the input structure, sorted vals).
+    """
+    words = as_words(keys)
+    out = jax.lax.sort(
+        (*words, vals), dimension=-1, num_keys=len(words) + 1
+    )
+    return like_words(tuple(out[:-1]), keys), out[-1]
+
+
+def sort_tiles_sample_kv(keys, vals: jax.Array, *, num_samples: int):
     """Oracle for the fused sort+sample kernel: sorted rows plus the
-    s equidistant samples (elements (j+1)*T/s - 1) of each sorted row."""
-    m, t = keys.shape
+    s equidistant samples (elements (j+1)*T/s - 1) of each sorted row.
+
+    Returns:
+        (sorted_keys, sorted_vals, sample_keys (m, s), sample_vals) —
+        keys in the input structure.
+    """
+    words = as_words(keys)
+    m, t = words[0].shape
     assert t % num_samples == 0, (t, num_samples)
-    sk, sv = jax.lax.sort((keys, vals), dimension=-1, num_keys=2)
+    out = jax.lax.sort(
+        (*words, vals), dimension=-1, num_keys=len(words) + 1
+    )
     chunk = t // num_samples
-    samp_k = sk.reshape(m, num_samples, chunk)[:, :, -1]
-    samp_v = sv.reshape(m, num_samples, chunk)[:, :, -1]
-    return sk, sv, samp_k, samp_v
+    samples = tuple(
+        a.reshape(m, num_samples, chunk)[:, :, -1] for a in out
+    )
+    return (
+        like_words(tuple(out[:-1]), keys),
+        out[-1],
+        like_words(tuple(samples[:-1]), keys),
+        samples[-1],
+    )
 
 
 def splitter_ranks(keys, vals, sp_keys, sp_vals):
     """(m, S) ranks: # elements of tile i lexicographically < splitter (i, j).
 
-    keys/vals: (m, T) tiles; sp_keys/sp_vals: (m, S) per-tile splitters.
+    Args:
+        keys/vals: (m, T) tiles; sp_keys/sp_vals: (m, S) per-tile
+        splitters — keys in either key structure (must match).
     """
-    lt = (keys[:, :, None] < sp_keys[:, None, :]) | (
-        (keys[:, :, None] == sp_keys[:, None, :])
-        & (vals[:, :, None] < sp_vals[:, None, :])
-    )
-    return jnp.sum(lt.astype(jnp.int32), axis=1)
+    words = as_words(keys)
+    sp_words = as_words(sp_keys)
+    parts = words + (vals,)
+    sp_parts = sp_words + (sp_vals,)
+    lt = parts[0][:, :, None] < sp_parts[0][:, None, :]
+    eq = parts[0][:, :, None] == sp_parts[0][:, None, :]
+    for a, b in zip(parts[1:], sp_parts[1:]):
+        lt = lt | (eq & (a[:, :, None] < b[:, None, :]))
+        eq = eq & (a[:, :, None] == b[:, None, :])
+    return jnp.sum(lt, axis=1, dtype=jnp.int32)
 
 
 def splitter_partition(keys, vals, sp_keys, sp_vals):
     """Oracle for the fused Step 6+7 epilogue: (ranks (m, S),
     counts (m, S+1)) where counts[i, j] = size of bucket j in tile i."""
-    m, t = keys.shape
+    m, t = as_words(keys)[0].shape
     ranks = splitter_ranks(keys, vals, sp_keys, sp_vals)
     starts = jnp.concatenate([jnp.zeros((m, 1), jnp.int32), ranks], axis=1)
     ends = jnp.concatenate([ranks, jnp.full((m, 1), t, jnp.int32)], axis=1)
     return ranks, ends - starts
 
 
-def topk_desc(keys: jax.Array, *, k: int):
-    """Row-wise smallest-k of canonical uint32 keys (== top-k scores).
+def topk_desc(keys, *, k: int):
+    """Row-wise smallest-k of canonical keys (== top-k scores).
 
     Matches kernels.topk.topk_desc: ties toward smaller column index.
+
+    Args:
+        keys: (R, C) uint32 word array or tuple of word arrays.
+    Returns:
+        (top_keys (R, k) in the input structure, top_idx (R, k) int32).
     """
-    r, c = keys.shape
+    words = as_words(keys)
+    r, c = words[0].shape
     idx = jax.lax.broadcasted_iota(jnp.int32, (r, c), 1)
-    sk, si = jax.lax.sort((keys, idx), dimension=-1, num_keys=2)
-    return sk[:, :k], si[:, :k]
+    out = jax.lax.sort(
+        (*words, idx), dimension=-1, num_keys=len(words) + 1
+    )
+    return (
+        like_words(tuple(a[:, :k] for a in out[:-1]), keys),
+        out[-1][:, :k],
+    )

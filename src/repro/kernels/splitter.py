@@ -19,7 +19,11 @@ Two entry points (see DESIGN.md §3):
     touches HBM again.  It is also row-blocked: one grid program
     partitions ``block_rows`` tiles.
 
-Comparison is lexicographic on (key, value) to match the sort kernel.
+Comparison is lexicographic on ``(*key_words, value)`` to match the sort
+kernel: keys are one or more canonical uint32 word arrays (msw first —
+see ``core/key_codec``), each extra word adds one cmp+select level to
+the comparison matrix.  Both entries accept a bare uint32 array (the
+one-word fast path) or a tuple of word arrays.
 """
 
 from __future__ import annotations
@@ -31,70 +35,91 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.bitonic import largest_pow2_divisor
+from repro.kernels.bitonic import as_words, largest_pow2_divisor
 
 
-def _lt_matrix(keys, vals, sk, sv):
-    """(..., T, S) lexicographic (key, val) < (splitter key, splitter val)."""
-    return (keys[..., :, None] < sk[..., None, :]) | (
-        (keys[..., :, None] == sk[..., None, :])
-        & (vals[..., :, None] < sv[..., None, :])
-    )
+def _lt_matrix(words, vals, sp_words, sp_vals):
+    """(..., T, S) lexicographic (*words, val) < (*sp_words, sp_val).
+
+    words/sp_words: parallel tuples of uint32 word arrays (msw first),
+    shapes (..., T) and (..., S); vals/sp_vals: int32 payloads.
+    """
+    parts = words + (vals,)
+    sp_parts = sp_words + (sp_vals,)
+    lt = parts[0][..., :, None] < sp_parts[0][..., None, :]
+    eq = parts[0][..., :, None] == sp_parts[0][..., None, :]
+    for a, b in zip(parts[1:], sp_parts[1:]):
+        lt = lt | (eq & (a[..., :, None] < b[..., None, :]))
+        eq = eq & (a[..., :, None] == b[..., None, :])
+    return lt
 
 
-def _splitter_kernel(k_ref, v_ref, sk_ref, sv_ref, out_ref):
-    keys = k_ref[0, :]  # (T,)
-    vals = v_ref[0, :]
-    sk = sk_ref[0, :]  # (S,)
-    sv = sv_ref[0, :]
-    lt = _lt_matrix(keys, vals, sk, sv)
-    out_ref[0, :] = jnp.sum(lt.astype(jnp.int32), axis=0)
+def _splitter_kernel(*refs, num_words: int):
+    nw1 = num_words + 1
+    words = tuple(r[0, :] for r in refs[:num_words])  # (T,) each
+    vals = refs[num_words][0, :]
+    sp_words = tuple(r[0, :] for r in refs[nw1:nw1 + num_words])  # (S,)
+    sp_vals = refs[nw1 + num_words][0, :]
+    out_ref = refs[-1]
+    lt = _lt_matrix(words, vals, sp_words, sp_vals)
+    out_ref[0, :] = jnp.sum(lt, axis=0, dtype=jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def splitter_ranks(
-    keys: jax.Array,
+    keys,
     vals: jax.Array,
-    sp_keys: jax.Array,
+    sp_keys,
     sp_vals: jax.Array,
     *,
     interpret: bool = True,
 ):
     """Rank of each splitter in each (sorted or unsorted) tile.
 
-    keys/vals: (m, T) uint32/int32 tiles.
-    sp_keys/sp_vals: (m, S) per-tile splitters (canonical uint32 / int32).
-    Returns (m, S) int32: ranks[i, j] = #elements of tile i strictly less
-    (lexicographically) than splitter (i, j).  Monotone in j when splitters
-    are sorted; the tile itself need not be sorted for correctness (counting,
-    not searching) — sortedness only matters for the relocation step.
+    Args:
+        keys: (m, T) uint32 canonical key words (bare array or tuple,
+            msw first); vals: (m, T) int32 payloads.
+        sp_keys/sp_vals: (m, S) per-tile splitters in the same key
+            structure as ``keys``.
+    Returns:
+        (m, S) int32: ranks[i, j] = #elements of tile i strictly less
+        (lexicographically) than splitter (i, j).  Monotone in j when
+        splitters are sorted; the tile itself need not be sorted for
+        correctness (counting, not searching) — sortedness only matters
+        for the relocation step.
     """
-    m, t = keys.shape
-    s = sp_keys.shape[1]
-    assert sp_keys.shape == (m, s) and sp_vals.shape == (m, s)
-    assert keys.dtype == jnp.uint32 and vals.dtype == jnp.int32
-    assert sp_keys.dtype == jnp.uint32 and sp_vals.dtype == jnp.int32
+    words = as_words(keys)
+    sp_words = as_words(sp_keys)
+    nw = len(words)
+    assert len(sp_words) == nw
+    m, t = words[0].shape
+    s = sp_words[0].shape[1]
+    assert all(w.shape == (m, t) and w.dtype == jnp.uint32 for w in words)
+    assert all(w.shape == (m, s) and w.dtype == jnp.uint32 for w in sp_words)
+    assert vals.dtype == jnp.int32 and sp_vals.dtype == jnp.int32
     grid = (m,)
     tile_spec = pl.BlockSpec((1, t), lambda i: (i, 0))
     sp_spec = pl.BlockSpec((1, s), lambda i: (i, 0))
     return pl.pallas_call(
-        _splitter_kernel,
+        functools.partial(_splitter_kernel, num_words=nw),
         grid=grid,
-        in_specs=[tile_spec, tile_spec, sp_spec, sp_spec],
+        in_specs=[tile_spec] * (nw + 1) + [sp_spec] * (nw + 1),
         out_specs=pl.BlockSpec((1, s), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, s), jnp.int32),
         interpret=interpret,
-    )(keys, vals, sp_keys, sp_vals)
+    )(*words, vals, *sp_words, sp_vals)
 
 
-def _partition_kernel(k_ref, v_ref, sk_ref, sv_ref, ranks_ref, counts_ref):
-    keys = k_ref[...]  # (block_rows, T)
-    vals = v_ref[...]
-    sk = sk_ref[...]  # (block_rows, S)
-    sv = sv_ref[...]
-    t = keys.shape[1]
-    lt = _lt_matrix(keys, vals, sk, sv)  # (block_rows, T, S)
-    ranks = jnp.sum(lt.astype(jnp.int32), axis=1)  # (block_rows, S)
+def _partition_kernel(*refs, num_words: int):
+    nw1 = num_words + 1
+    words = tuple(r[...] for r in refs[:num_words])  # (block_rows, T)
+    vals = refs[num_words][...]
+    sp_words = tuple(r[...] for r in refs[nw1:nw1 + num_words])
+    sp_vals = refs[nw1 + num_words][...]
+    ranks_ref, counts_ref = refs[-2], refs[-1]
+    t = vals.shape[1]
+    lt = _lt_matrix(words, vals, sp_words, sp_vals)  # (block_rows, T, S)
+    ranks = jnp.sum(lt, axis=1, dtype=jnp.int32)  # (block_rows, S)
     ranks_ref[...] = ranks
     # Bucket j of a sorted tile is [start_j, end_j) with start_0 = 0,
     # start_j = ranks[j-1], end_{S} = T: counts = ends - starts, computed
@@ -106,9 +131,9 @@ def _partition_kernel(k_ref, v_ref, sk_ref, sv_ref, ranks_ref, counts_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def splitter_partition(
-    keys: jax.Array,
+    keys,
     vals: jax.Array,
-    sp_keys: jax.Array,
+    sp_keys,
     sp_vals: jax.Array,
     *,
     block_rows: int | None = None,
@@ -116,19 +141,27 @@ def splitter_partition(
 ):
     """Fused Step 6+7 epilogue: splitter ranks AND bucket counts per tile.
 
-    Same inputs as :func:`splitter_ranks`.  Returns
-      ranks  (m, S)   int32 — rank of splitter j in tile i, and
-      counts (m, S+1) int32 — size of bucket j in tile i (sums to T),
-    from a single HBM read of the tiles.  ``block_rows`` tiles are
-    partitioned per grid program (None = auto; must divide m).
+    Args:
+        Same as :func:`splitter_ranks` (multi-word keys accepted), plus
+        ``block_rows`` tiles partitioned per grid program (None = auto;
+        clamped to a power-of-two divisor of m).
+    Returns:
+        ranks  (m, S)   int32 — rank of splitter j in tile i, and
+        counts (m, S+1) int32 — size of bucket j in tile i (sums to T),
+        from a single HBM read of the tiles.
     """
-    m, t = keys.shape
-    s = sp_keys.shape[1]
-    assert sp_keys.shape == (m, s) and sp_vals.shape == (m, s)
-    assert keys.dtype == jnp.uint32 and vals.dtype == jnp.int32
-    assert sp_keys.dtype == jnp.uint32 and sp_vals.dtype == jnp.int32
-    # (T x S) i32 comparison matrix per row dominates VMEM here.
-    per_row = 4 * t * (s + 2)
+    words = as_words(keys)
+    sp_words = as_words(sp_keys)
+    nw = len(words)
+    assert len(sp_words) == nw
+    m, t = words[0].shape
+    s = sp_words[0].shape[1]
+    assert all(w.shape == (m, t) and w.dtype == jnp.uint32 for w in words)
+    assert all(w.shape == (m, s) and w.dtype == jnp.uint32 for w in sp_words)
+    assert vals.dtype == jnp.int32 and sp_vals.dtype == jnp.int32
+    # (T x S) i32 comparison matrix per row dominates VMEM here (one
+    # lt+eq predicate pair per key word adds to it).
+    per_row = 4 * t * (s + 2) * (nw + 1) // 2 + 4 * t * (nw + 1)
     limit = max((4 * 1024 * 1024) // per_row, 1)
     if block_rows is not None:
         limit = min(limit, block_rows)
@@ -137,9 +170,9 @@ def splitter_partition(
     tile_spec = pl.BlockSpec((block_rows, t), lambda i: (i, 0))
     sp_spec = pl.BlockSpec((block_rows, s), lambda i: (i, 0))
     return pl.pallas_call(
-        _partition_kernel,
+        functools.partial(_partition_kernel, num_words=nw),
         grid=grid,
-        in_specs=[tile_spec, tile_spec, sp_spec, sp_spec],
+        in_specs=[tile_spec] * (nw + 1) + [sp_spec] * (nw + 1),
         out_specs=[
             pl.BlockSpec((block_rows, s), lambda i: (i, 0)),
             pl.BlockSpec((block_rows, s + 1), lambda i: (i, 0)),
@@ -152,4 +185,4 @@ def splitter_partition(
             dimension_semantics=("parallel",)
         ),
         interpret=interpret,
-    )(keys, vals, sp_keys, sp_vals)
+    )(*words, vals, *sp_words, sp_vals)

@@ -6,6 +6,11 @@ number of experts (64 / 128 for the assigned MoE archs) — small enough
 that a full row sort is cheaper than iterative max-extraction, and the
 bitonic network is branch-free (same rationale as the paper's Step 2).
 
+Keys arrive already in the canonical descending encoding (the caller
+uses a ``descending=True`` key codec, see ``ops.topk``): ascending
+canonical order == descending score order, for any supported dtype
+including the two-word 64-bit encodings.
+
 Ties broken toward the smaller column index (matches jax.lax.top_k).
 """
 
@@ -17,43 +22,54 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.bitonic import bitonic_network_rows
+from repro.kernels.bitonic import as_words, bitonic_network_rows, like_words
 
 
-def _topk_kernel(k_ref, ko_ref, io_ref, *, kk: int):
-    keys = k_ref[...]  # (Rb, C) canonical uint32, ascending == descending score
-    rb, c = keys.shape
+def _topk_kernel(*refs, num_words: int, kk: int):
+    words = tuple(r[...] for r in refs[:num_words])  # (Rb, C) canonical
+    out_word_refs = refs[num_words:2 * num_words]
+    io_ref = refs[-1]
+    rb, c = words[0].shape
     idx = jax.lax.broadcasted_iota(jnp.int32, (rb, c), 1)
-    keys, idx = bitonic_network_rows(keys, idx)
-    ko_ref[...] = keys[:, :kk]
+    words, idx = bitonic_network_rows(words, idx)
+    for r, w in zip(out_word_refs, as_words(words)):
+        r[...] = w[:, :kk]
     io_ref[...] = idx[:, :kk]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
 def topk_desc(
-    keys: jax.Array, *, k: int, block_rows: int = 256, interpret: bool = True
+    keys, *, k: int, block_rows: int = 256, interpret: bool = True
 ):
-    """Top-k per row of (R, C) canonical-uint32 keys where SMALLER canonical
-    value == HIGHER score (caller pre-inverts, see ops.topk).
+    """Top-k per row of (R, C) canonical keys where SMALLER canonical
+    value == HIGHER score (caller pre-encodes with a descending codec,
+    see ops.topk).
 
-    Returns (top_keys (R, k) uint32, top_idx (R, k) int32).
-    R must be a multiple of block_rows; C a power of two.
+    Args:
+        keys: (R, C) uint32 canonical key words (bare array or tuple,
+            msw first); C a power of two, R a multiple of block_rows.
+        k: columns to emit per row.
+        block_rows: rows sorted per grid program.
+    Returns:
+        (top_keys (R, k) in the input key structure, top_idx (R, k)
+        int32) — the k smallest canonical keys per row, ties toward the
+        smaller column index.
     """
-    r, c = keys.shape
-    assert keys.dtype == jnp.uint32
+    words = as_words(keys)
+    nw = len(words)
+    r, c = words[0].shape
+    assert all(w.dtype == jnp.uint32 and w.shape == (r, c) for w in words)
     assert r % block_rows == 0, (r, block_rows)
     grid = (r // block_rows,)
-    return pl.pallas_call(
-        functools.partial(_topk_kernel, kk=k),
+    spec_in = pl.BlockSpec((block_rows, c), lambda i: (i, 0))
+    spec_out = pl.BlockSpec((block_rows, k), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_topk_kernel, num_words=nw, kk=k),
         grid=grid,
-        in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0))],
-        out_specs=[
-            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((r, k), jnp.uint32),
-            jax.ShapeDtypeStruct((r, k), jnp.int32),
-        ],
+        in_specs=[spec_in] * nw,
+        out_specs=[spec_out] * (nw + 1),
+        out_shape=[jax.ShapeDtypeStruct((r, k), jnp.uint32)] * nw
+        + [jax.ShapeDtypeStruct((r, k), jnp.int32)],
         interpret=interpret,
-    )(keys)
+    )(*words)
+    return like_words(tuple(out[:nw]), keys), out[nw]

@@ -8,6 +8,8 @@
   * batched sort of B rows == B independent 1-D sorts (DESIGN.md §5)
   * segmented sort never leaks an element across a segment boundary,
     and stability holds per segment
+  * key-codec encode/decode is a sorted-order-preserving bijection for
+    every dtype (64-bit two-word encodings included, DESIGN.md §6)
 """
 
 import jax
@@ -21,6 +23,7 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import bucket_sort, partial_sort
+from repro.core.key_codec import codec_for
 from repro.core.sort_config import SortConfig
 
 CFG = SortConfig(tile=128, s=8, direct_max=256, impl="xla")
@@ -93,6 +96,55 @@ def test_partial_topk_matches_lax(xs, k):
     lv, li = jax.lax.top_k(jnp.asarray(x), k)
     np.testing.assert_array_equal(np.asarray(ti), np.asarray(li))
     np.testing.assert_array_equal(np.asarray(tv), np.asarray(lv))
+
+
+# ----------------------------------------------------------------------
+# Key codec (DESIGN.md §6)
+# ----------------------------------------------------------------------
+
+
+int64s = st.lists(
+    st.integers(min_value=-(2**63), max_value=2**63 - 1),
+    min_size=1, max_size=500,
+)
+floats64 = st.lists(
+    st.floats(allow_nan=True, allow_infinity=True),
+    min_size=1, max_size=500,
+)
+
+
+def _codec_bijection_case(x, descending):
+    """encode/decode roundtrips exactly AND the lexicographic unsigned
+    word order (index tiebreak) == jnp's stable (arg)sort order."""
+    codec = codec_for(x.dtype, descending)
+    words = codec.encode(x)
+    back = codec.decode(words)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+    wnp = [np.asarray(w) for w in words]
+    n = x.shape[0]
+    perm = np.lexsort(tuple([np.arange(n)] + list(reversed(wnp))))
+    want = np.asarray(jnp.argsort(x, stable=True, descending=descending))
+    np.testing.assert_array_equal(perm, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(int64s, st.booleans())
+def test_codec_int64_bijection_preserves_order(xs, descending):
+    with jax.experimental.enable_x64():
+        _codec_bijection_case(jnp.asarray(np.asarray(xs, np.int64)),
+                              descending)
+
+
+@settings(max_examples=25, deadline=None)
+@given(floats64, st.booleans())
+def test_codec_float64_bijection_preserves_order(xs, descending):
+    """Full float64 range incl. NaN/±inf; signed zeros normalized to
+    +0.0 (our total order ranks -0.0 < +0.0 strictly, numpy ties them —
+    the conformance suite pins the value-level agreement)."""
+    x = np.asarray(xs, np.float64)
+    x[x == 0.0] = 0.0
+    with jax.experimental.enable_x64():
+        _codec_bijection_case(jnp.asarray(x), descending)
 
 
 # ----------------------------------------------------------------------
