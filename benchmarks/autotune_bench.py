@@ -1,0 +1,74 @@
+"""--suite autotune: the measured plan search at the acceptance size.
+
+Runs ``core/autotune`` over the plan space (tile x s x block_rows x
+fusion x relocation) for the ``sort_throughput`` signature
+(int32, n = 2^20; quick: 2^18), records the default-config time, the
+best-found plan (geometry in ``derived``) and its speedup into
+BENCH_sort.json, then verifies a same-signature ``sort_planned`` call
+on the cached winner performs zero retraces (the serving property).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune as autotune_mod
+from repro.core import bucket_sort
+from repro.core.sort_config import SortConfig
+
+# Match benchmarks/sort_throughput.py: the CPU container measures the
+# xla path; on TPU the pallas default kicks in via impl=None.
+CFG = SortConfig(tile=4096, s=64, direct_max=8192, impl="xla")
+
+
+def run(n=1048576, max_trials=12, repeats=3):
+    res = autotune_mod.autotune(
+        n, "int32", CFG, max_trials=max_trials, repeats=repeats
+    )
+    p = res.best_plan
+    geom = (
+        f"tile={p.root.tile or p.root.lp} s={p.root.s} "
+        f"levels={p.num_levels} reloc={p.root.relocation} "
+        f"block_rows={p.root.block_rows}"
+    )
+    rows = [
+        dict(
+            name=f"autotune/n={n}/default",
+            us_per_call=res.default_us,
+            derived=f"rate={n / res.default_us:.2f}Mkeys/s base config",
+        ),
+        dict(
+            name=f"autotune/n={n}/best",
+            us_per_call=res.best_us,
+            derived=(
+                f"rate={n / res.best_us:.2f}Mkeys/s "
+                f"speedup={res.speedup:.2f}x "
+                f"plan[{res.best_label}] {geom}"
+            ),
+        ),
+    ]
+    for t in sorted(res.trials, key=lambda t: t.us_per_call)[:5]:
+        rows.append(
+            dict(
+                name=f"autotune/n={n}/trial[{t.label}]",
+                us_per_call=t.us_per_call,
+                derived=f"{res.trials[0].us_per_call / t.us_per_call:.2f}x vs base",
+            )
+        )
+
+    # Zero-retrace check on the winner: the serving property the plan
+    # cache exists for (same plan object -> same jit executable).
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32))
+    bucket_sort.sort_planned(x, p)
+    t0 = bucket_sort.trace_count()
+    bucket_sort.sort_planned(x, p)
+    rows.append(
+        dict(
+            name=f"autotune/n={n}/retrace_on_reuse",
+            us_per_call=0.0,
+            derived=f"{bucket_sort.trace_count() - t0} (0 == plan reuse compiles nothing)",
+        )
+    )
+    return rows

@@ -43,6 +43,7 @@ def main() -> None:
         args.json = "" if (args.only and not merge) else "BENCH_sort.json"
 
     from benchmarks import (
+        autotune_bench,
         batched_segmented,
         distribution_robustness,
         dtypes_throughput,
@@ -74,12 +75,18 @@ def main() -> None:
             b=64 if quick else 256, l=2048),
         "segmented": lambda: batched_segmented.run_segmented(
             n=65536 if quick else 262144, segments=64 if quick else 256),
+        "autotune": lambda: autotune_bench.run(
+            n=262144 if quick else 1048576,
+            max_trials=6 if quick else 12),
     }
     only = set(args.only.split(",")) if args.only else None
     if only:
         unknown = only - set(suites)
         if unknown:
-            ap.error(f"unknown suite(s): {sorted(unknown)}")
+            ap.error(
+                f"unknown suite(s): {sorted(unknown)}; "
+                f"valid suites: {', '.join(sorted(suites))}"
+            )
 
     print("name,us_per_call,derived")
     failures = 0

@@ -23,6 +23,7 @@ import numpy as np
 
 from benchmarks.common import timeit
 from repro.core import bucket_sort as bs
+from repro.core.plan import build_words_plan
 from repro.core.sort_config import SortConfig, next_pow2, round_up
 from repro.kernels import ops
 
@@ -75,9 +76,11 @@ def run(n=1048576, repeats=3, pallas_compare=True):
 
     ranks, counts2 = jax.block_until_ready(ranks_fn(tk, tv, ssk, ssv))
 
+    full_plan = build_words_plan(n, 1, CFG)
+
     @jax.jit
     def full(u):
-        return bs._sort_canonical((u,), CFG)
+        return bs._sort_canonical((u,), full_plan)
 
     rows = []
     t_local = timeit(local_sort, u, repeats=repeats)

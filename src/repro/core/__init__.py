@@ -4,9 +4,13 @@
 # multi-chip/pod distributed variant, partial (top-k) sort, and the
 # baselines the paper compares against.
 
+# NOTE: the tuning entry itself stays namespaced (repro.core.autotune.
+# autotune) — binding the function name here would shadow the submodule.
+from repro.core.autotune import AutotuneResult, load_plan, plan_for, save_plan
 from repro.core.bucket_sort import (
     argsort,
     argsort_batched,
+    resolve_plan,
     segment_argsort,
     segment_sort,
     sort,
@@ -14,11 +18,22 @@ from repro.core.bucket_sort import (
     sort_batched_with_stats,
     sort_kv,
     sort_kv_batched,
+    sort_planned,
     sort_with_stats,
 )
 from repro.core.distributed_sort import DistSortSpec, make_sharded_sort, sorted_shard
 from repro.core.key_codec import SUPPORTED_DTYPES, KeyCodec, codec_for
 from repro.core.partial_sort import topk, topk_batched
+from repro.core.plan import (
+    LevelPlan,
+    SortPlan,
+    TopkPlan,
+    build_plan,
+    build_topk_plan,
+    build_words_plan,
+    plan_from_dict,
+    plan_to_dict,
+)
 from repro.core.sort_config import DEFAULT_CONFIG, PAPER_CONFIG, SortConfig
 
 __all__ = [
@@ -31,6 +46,7 @@ __all__ = [
     "sort_batched_with_stats",
     "sort_kv",
     "sort_kv_batched",
+    "sort_planned",
     "sort_with_stats",
     "topk",
     "topk_batched",
@@ -40,6 +56,19 @@ __all__ = [
     "SortConfig",
     "DEFAULT_CONFIG",
     "PAPER_CONFIG",
+    "SortPlan",
+    "LevelPlan",
+    "TopkPlan",
+    "build_plan",
+    "build_topk_plan",
+    "build_words_plan",
+    "plan_from_dict",
+    "plan_to_dict",
+    "resolve_plan",
+    "AutotuneResult",
+    "plan_for",
+    "load_plan",
+    "save_plan",
     "DistSortSpec",
     "make_sharded_sort",
     "sorted_shard",

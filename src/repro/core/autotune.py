@@ -1,0 +1,397 @@
+"""Plan autotuner: measured search over the sort-plan space, with a
+persistent on-disk plan cache.
+
+The planner (``core/plan.py``) makes the schedule explicit data; this
+module picks the BEST schedule for a signature by measuring real
+executions — the knobs that dominate throughput (``tile``, ``s``,
+``block_rows``, the fusion flags, the relocation mode) must be tuned
+per architecture and input size (Leischner et al.; Casanova et al.),
+and the deterministic pipeline makes every candidate a pure config
+swap.
+
+Cache semantics (DESIGN.md §7): plans are cached under
+``(shape, dtype, backend, cfg-fingerprint)`` — the signature of the
+*requesting* config (fingerprint over every field except ``plan``).  A
+hit deserializes to a plan EQUAL to the one saved (dataclass equality,
+tested), so the jit static-argument cache also hits: repeated
+same-signature ``sort()`` calls after a plan-cache hit compile zero new
+executables.
+
+The cache lives at ``$REPRO_SORT_PLAN_CACHE`` (default
+``~/.cache/repro_sort/plans.json``); writes are atomic
+(tmp + ``os.replace``).  ``SortConfig(plan="autotune")`` routes every
+public entry point through :func:`plan_for`; benchmarks record
+best-found plans and their speedups via ``benchmarks/run.py --suite
+autotune``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.plan import (
+    SortPlan,
+    build_plan,
+    plan_from_dict,
+    plan_to_dict,
+)
+from repro.core.sort_config import SortConfig, next_pow2
+
+_CACHE_ENV = "REPRO_SORT_PLAN_CACHE"
+_STORE_SCHEMA = "sort_plan_cache/v1"
+
+# Process-local memo so a warm signature never re-reads the disk store.
+_MEMO: dict[str, SortPlan] = {}
+# Memo for explicit plan FILES (SortConfig(plan=<path>)), keyed by
+# (path, mtime_ns) so the hot serving path pays one stat() per call
+# instead of open+parse+tree-rebuild, while an updated file still
+# reloads.
+_FILE_MEMO: dict[tuple, SortPlan] = {}
+
+
+def cache_path() -> str:
+    """Resolved plan-cache location (env override, else XDG-ish default)."""
+    env = os.environ.get(_CACHE_ENV)
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro_sort", "plans.json"
+    )
+
+
+def cache_key(plan: SortPlan) -> str:
+    """The persistent-cache key: every component of the plan signature —
+    (rows, length) shape, dtype+order, resolved impl/interpret/backend,
+    and the requesting config's fingerprint."""
+    return "|".join(str(x) for x in plan.signature())
+
+
+def _load_store(path: str) -> dict:
+    try:
+        with open(path) as f:
+            store = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {"schema": _STORE_SCHEMA, "plans": {}}
+    if store.get("schema") != _STORE_SCHEMA:
+        return {"schema": _STORE_SCHEMA, "plans": {}}
+    return store
+
+
+def _save_store(path: str, store: dict) -> None:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(store, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def save_plan(plan: SortPlan, path: str, *, meta: dict | None = None) -> None:
+    """Write one plan to ``path`` as a standalone plan file (the format
+    ``SortConfig(plan=<path>)`` and :func:`load_plan` read)."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    payload = plan_to_dict(plan)
+    if meta:
+        payload["meta"] = meta
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def load_plan(
+    path: str,
+    *,
+    length: int | None = None,
+    dtype=None,
+    cfg: SortConfig | None = None,
+    rows: int = 1,
+    pad_rows: bool = False,
+) -> SortPlan:
+    """Read a plan file saved by :func:`save_plan`.
+
+    When a call signature is supplied (``length``/``dtype``/``rows``,
+    as ``resolve_plan`` does for ``SortConfig(plan=<path>)``), the
+    file's plan must match it — shape, dtype and order are load-bearing
+    (ValueError otherwise).  The plan's tunables (tile, s, ...) override
+    the requesting cfg's: that is the point of carrying a tuned plan.
+    """
+    import jax.numpy as jnp
+
+    fkey = (path, os.stat(path).st_mtime_ns)
+    plan = _FILE_MEMO.get(fkey)
+    if plan is None:
+        with open(path) as f:
+            d = json.load(f)
+        d.pop("meta", None)
+        plan = plan_from_dict(d)
+        _FILE_MEMO[fkey] = plan
+    if length is not None:
+        want = (rows, length, jnp.dtype(dtype).name,
+                cfg.descending if cfg else plan.descending)
+        got = (plan.rows, plan.length, plan.dtype_name, plan.descending)
+        if want != got:
+            raise ValueError(
+                f"plan file {path} was built for (rows, length, dtype, "
+                f"descending)={got}, call needs {want}"
+            )
+    return plan
+
+
+# ----------------------------------------------------------------------
+# Candidate space
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the search space (a full SortConfig swap)."""
+
+    cfg: SortConfig
+    label: str
+
+
+def candidate_space(
+    cfg: SortConfig, length: int, *, max_trials: int = 16
+) -> list[Candidate]:
+    """Deterministic, ordered candidate list around ``cfg``.
+
+    The BASE config is always candidate 0, so the measured winner is by
+    construction at least as fast as the default plan.  The space
+    crosses tile × s × block_rows × fusion × relocation, nearest
+    neighbours first, deduplicated, truncated to ``max_trials``.
+    """
+    tiles = [cfg.tile, cfg.tile * 2, max(cfg.tile // 2, 128), cfg.tile * 4]
+    svals = [cfg.s, cfg.s * 2, max(cfg.s // 2, 2), cfg.s * 4]
+    brs = [cfg.block_rows, 8, 32] if cfg.block_rows is None else [
+        cfg.block_rows, None, 8
+    ]
+    fusions = [(True, True), (False, False)]
+    relocs = ["gather", "scatter"]
+    if cfg.relocation != "gather":
+        relocs.reverse()
+    if not cfg.fuse_sampling:
+        fusions.reverse()
+
+    seen: set[SortConfig] = set()
+    out: list[Candidate] = []
+
+    def _add(**kw):
+        if len(out) >= max_trials:
+            return
+        t = kw.get("tile", cfg.tile)
+        s = kw.get("s", cfg.s)
+        if s > t or t % s != 0 or t > max(next_pow2(length), 128):
+            return
+        # Only grow direct_max when a LARGER tile needs it to stay a
+        # valid config — candidate 0 (no overrides) must be the
+        # requesting config itself, bit for bit, or default_us/speedup
+        # would measure the wrong schedule.
+        if t > cfg.direct_max:
+            kw.setdefault("direct_max", 2 * t)
+        kw.setdefault("plan", "default")
+        try:
+            cand = dataclasses.replace(cfg, **kw)
+        except ValueError:
+            return
+        if cand in seen:
+            return
+        seen.add(cand)
+        bits = ",".join(f"{k}={v}" for k, v in sorted(kw.items())
+                        if k not in ("direct_max", "plan"))
+        out.append(Candidate(cfg=cand, label=bits or "base"))
+
+    _add()  # the base config: candidate 0, the speedup reference
+    for t in tiles:
+        _add(tile=t)
+    for s in svals:
+        _add(s=s)
+    for t in tiles[:2]:
+        for s in svals[:2]:
+            _add(tile=t, s=s)
+    for br in brs:
+        _add(block_rows=br)
+    for fs, fr in fusions:
+        _add(fuse_sampling=fs, fuse_ranking=fr)
+    for rl in relocs:
+        _add(relocation=rl)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Measurement
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialResult:
+    label: str
+    us_per_call: float
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneResult:
+    """Outcome of one tuning run.
+
+    Attributes:
+        best_plan: the measured-fastest candidate's plan.
+        best_us / default_us: median wall micros of the winner and of
+            candidate 0 (the requesting config) — ``speedup`` is their
+            ratio, >= 1.0 up to timer noise since the default is in the
+            space.
+        trials: every candidate's measurement, search order.
+    """
+
+    best_plan: SortPlan
+    best_label: str
+    best_us: float
+    default_us: float
+    trials: tuple[TrialResult, ...]
+
+    @property
+    def speedup(self) -> float:
+        return self.default_us / self.best_us if self.best_us else 1.0
+
+
+def _measure(fn, x, *, repeats: int, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(x))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def autotune(
+    length: int,
+    dtype,
+    cfg: SortConfig,
+    *,
+    rows: int = 1,
+    pad_rows: bool = False,
+    max_trials: int = 16,
+    repeats: int = 3,
+    seed: int = 0,
+) -> AutotuneResult:
+    """Measured search: build each candidate's plan, time the real
+    plan-driven executor on representative data, return the winner.
+
+    Data is deterministic (seeded uniform keys of the target dtype), so
+    back-to-back runs rank candidates consistently up to timer noise.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import bucket_sort
+
+    rng = np.random.default_rng(seed)
+    npdt = np.dtype(jnp.dtype(dtype).name)
+    shape = (length,) if rows == 1 else (rows, length)
+    if npdt.kind == "f":
+        x = rng.standard_normal(shape).astype(npdt)
+    elif npdt.kind == "b":
+        x = rng.integers(0, 2, shape).astype(npdt)
+    elif npdt.kind == "u":
+        x = rng.integers(0, np.iinfo(npdt).max, shape, dtype=np.uint64).astype(npdt)
+    else:
+        info = np.iinfo(npdt)
+        x = rng.integers(info.min, info.max, shape, dtype=np.int64).astype(npdt)
+    xj = jnp.asarray(x)
+
+    trials: list[TrialResult] = []
+    best_plan, best_label = None, ""
+    best_us, default_us = float("inf"), float("inf")
+    for i, cand in enumerate(candidate_space(cfg, length,
+                                             max_trials=max_trials)):
+        plan = build_plan(
+            length, dtype, cand.cfg, rows=rows, pad_rows=pad_rows
+        )
+        try:
+            us = _measure(
+                lambda a, p=plan: bucket_sort.sort_planned(a, p), xj,
+                repeats=repeats,
+            )
+        except Exception:  # a candidate may be unrunnable on this backend
+            continue
+        trials.append(TrialResult(label=cand.label, us_per_call=us))
+        if i == 0:
+            default_us = us
+        if us < best_us:
+            best_plan, best_label, best_us = plan, cand.label, us
+    assert best_plan is not None, "no autotune candidate ran"
+    return AutotuneResult(
+        best_plan=best_plan,
+        best_label=best_label,
+        best_us=best_us,
+        default_us=default_us,
+        trials=tuple(trials),
+    )
+
+
+# ----------------------------------------------------------------------
+# The cfg.plan == "autotune" entry: cache-or-tune
+# ----------------------------------------------------------------------
+
+
+def plan_for(
+    length: int,
+    dtype,
+    cfg: SortConfig,
+    *,
+    rows: int = 1,
+    pad_rows: bool = False,
+    path: str | None = None,
+    max_trials: int = 16,
+    repeats: int = 3,
+) -> SortPlan:
+    """Cached-or-tuned plan for a signature (the ``plan="autotune"``
+    path).
+
+    Lookup order: process memo -> on-disk store -> run
+    :func:`autotune` and persist the winner.  The reloaded plan is
+    EQUAL to the saved one, so jit's static-argument cache hits too —
+    a plan-cache hit performs zero retraces (tested).
+    """
+    base = build_plan(length, dtype, cfg, rows=rows, pad_rows=pad_rows)
+    key = cache_key(base)
+    if key in _MEMO:
+        return _MEMO[key]
+    path = path or cache_path()
+    store = _load_store(path)
+    rec = store["plans"].get(key)
+    if rec is not None:
+        plan = plan_from_dict(rec["plan"])
+        _MEMO[key] = plan
+        return plan
+    result = autotune(
+        length, dtype, cfg, rows=rows, pad_rows=pad_rows,
+        max_trials=max_trials, repeats=repeats,
+    )
+    store["plans"][key] = dict(
+        plan=plan_to_dict(result.best_plan),
+        best_us=round(result.best_us, 1),
+        default_us=round(result.default_us, 1),
+        speedup=round(result.speedup, 3),
+    )
+    _save_store(path, store)
+    _MEMO[key] = result.best_plan
+    return result.best_plan
+
+
+def clear_memo() -> None:
+    """Drop the process-local memos (tests use this to force the disk
+    path)."""
+    _MEMO.clear()
+    _FILE_MEMO.clear()

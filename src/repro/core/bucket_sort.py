@@ -18,6 +18,21 @@ Single-device deterministic sample sort.  The paper's nine steps map to
                                          gather-based compaction back to
                                          dense rows
 
+PLANNER / EXECUTOR SPLIT (DESIGN.md §7): deterministic regular
+sampling makes the whole multi-level schedule — recursion levels,
+per-level rows x tile geometry, s_round, capacities, pad budgets,
+kernel block sizes — a pure function of (shape, dtype, config).
+``core/plan.build_plan`` computes it ONCE as a frozen ``SortPlan``
+tree; the ``_run_node`` executor below merely walks it, and the jit'd
+canonical entry takes the plan as its static argument, so equal plans
+(the memoized builder object, or a plan reloaded from the
+``core/autotune`` persistent cache) share one compiled executable:
+same-signature calls trace exactly once and a plan-cache hit retraces
+zero times (``trace_count`` exposes the counter; tests assert it).
+``SortConfig.plan`` selects how plans are obtained ("default" /
+"autotune" / a plan-file path); ``sort_planned`` executes an explicit
+plan.
+
 TPU adaptation (see DESIGN.md §2): buckets live in a DENSE (rows*s, B)
 array with static capacity B = L/s_round + L/s — the deterministic
 regular-sampling bound makes this capacity *guaranteed*, which is what
@@ -95,12 +110,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as plan_mod
 from repro.core.key_codec import codec_for
-from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, next_pow2, round_up
+from repro.core.plan import LevelPlan, SortPlan, build_plan
+from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, round_up
 from repro.kernels import ops
 
 _MAXU = jnp.uint32(0xFFFFFFFF)
 _INT_MAX = 2**31 - 1
+
+# Python-side retrace counter: incremented once per TRACE of the jit'd
+# canonical entry (not per call).  ``tests/test_plan.py`` asserts the
+# compile-count discipline with it: same (shape, dtype, cfg) => one
+# trace; a plan-cache hit => zero new traces.
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    """Number of times the canonical packed entry has been TRACED in
+    this process (a retrace/compile-discipline counter for tests)."""
+    return _TRACE_COUNT
 
 
 def _pad_cols(kw, vals, new_len, pad_base):
@@ -130,14 +159,14 @@ def _pad_cols(kw, vals, new_len, pad_base):
     return kw, vals, pad_base + extra
 
 
-def _direct_sort(kw, vals, cfg, pad_base):
-    """Single-tile bitonic sort of each row (rows, L), L <= direct_max."""
-    r, length = kw[0].shape
-    lp = next_pow2(length)
-    kw, vals, pad_base = _pad_cols(kw, vals, lp, pad_base)
+def _direct_sort(kw, vals, node: LevelPlan, impl, interpret, pad_base):
+    """Single-tile bitonic sort of each row (rows, L), L <= direct_max;
+    all geometry (pow2-padded width, kernel block size) is plan-carried."""
+    length = kw[0].shape[1]
+    kw, vals, pad_base = _pad_cols(kw, vals, node.lp, pad_base)
     sk, sv = ops.sort_tiles(
-        kw, vals, impl=cfg.impl, interpret=cfg.interpret,
-        block_rows=cfg.block_rows,
+        kw, vals, impl=impl, interpret=interpret,
+        block_rows=node.block_rows,
     )
     return tuple(w[:, :length] for w in sk), sv[:, :length], pad_base
 
@@ -274,51 +303,64 @@ def _compact_scatter(ckw, cv, totals, r, s_round, cap, lp):
     return okw, ov.reshape(r, lp)
 
 
-def _sort_rows(kw, vals, cfg: SortConfig, pad_base: int, stats: list | None):
-    """Sort each row of (rows, L) canonical key words / int32 payloads.
+def _run_node(kw, vals, node: LevelPlan, impl: str, interpret: bool,
+              pad_base: int, stats: list | None):
+    """EXECUTOR: sort each row of (rows, L) canonical key words / int32
+    payloads by walking one node of the plan tree.
+
+    Every static quantity — padded lengths, tile counts, ``s_round``,
+    capacities, kernel block sizes, fusion/relocation choices — is read
+    off the :class:`repro.core.plan.LevelPlan`; the executor derives
+    NOTHING (the planner/executor split, DESIGN.md §7).
 
     Args:
         kw: tuple of (rows, L) uint32 key-word arrays (msw first).
         vals: (rows, L) int32 payloads, unique per row.
+        node: the plan node matching (rows, L) exactly.
     Returns:
         (sorted kw, sorted vals, pad_base) with dense sorted rows of the
-        input shape.  Static recursion: every shape is trace-time known;
+        input shape.  Static walk: every shape is trace-time known;
         ``pad_base`` is a trace-time python int tracking the per-row pad
         payload high-water mark (batch-size independent, DESIGN.md §5).
     """
     r, length = kw[0].shape
-    if length <= cfg.direct_max:
-        return _direct_sort(kw, vals, cfg, pad_base)
+    assert (r, length) == (node.rows, node.length), (
+        f"plan/data mismatch: data {(r, length)} vs plan node "
+        f"{(node.rows, node.length)}"
+    )
+    if node.kind == "direct":
+        return _direct_sort(kw, vals, node, impl, interpret, pad_base)
 
-    t, sper = cfg.tile, cfg.s
-    lp = round_up(length, t)
+    t, sper, lp, m = node.tile, node.s, node.lp, node.m
+    s_round, cap = node.s_round, node.cap
     kw, vals, pad_base = _pad_cols(kw, vals, lp, pad_base)
-    m = lp // t
 
     # Steps 1-3: row-blocked local tile sort, sample extraction fused in.
     tkw = tuple(w.reshape(r * m, t) for w in kw)
     tv = vals.reshape(r * m, t)
-    if cfg.fuse_sampling:
+    if node.fuse_sampling:
         tkw, tv, samp_kw, samp_v = ops.sort_tiles_sample(
-            tkw, tv, num_samples=sper, impl=cfg.impl,
-            interpret=cfg.interpret, block_rows=cfg.block_rows,
+            tkw, tv, num_samples=sper, impl=impl,
+            interpret=interpret, block_rows=node.block_rows,
         )
         samples_kw = tuple(w.reshape(r, m * sper) for w in samp_kw)
         samples_v = samp_v.reshape(r, m * sper)
     else:
         tkw, tv = ops.sort_tiles(
-            tkw, tv, impl=cfg.impl, interpret=cfg.interpret,
-            block_rows=cfg.block_rows,
+            tkw, tv, impl=impl, interpret=interpret,
+            block_rows=node.block_rows,
         )
         samp_idx = (jnp.arange(1, sper + 1, dtype=jnp.int32) * (t // sper)) - 1
         samples_kw = tuple(w[:, samp_idx].reshape(r, m * sper) for w in tkw)
         samples_v = tv[:, samp_idx].reshape(r, m * sper)
 
     # Step 4: sort all samples (recursive; sample array is L*s/T << L).
-    sskw, ssv, pad_base = _sort_rows(samples_kw, samples_v, cfg, pad_base, None)
+    sskw, ssv, pad_base = _run_node(
+        samples_kw, samples_v, node.sample_plan, impl, interpret, pad_base,
+        None,
+    )
 
     # Step 5: s_round - 1 equidistant global splitters.
-    s_round = min(max(next_pow2(-(-2 * lp // t)), 2), sper)
     total_samples = m * sper
     sp_idx = (jnp.arange(1, s_round, dtype=jnp.int32) * total_samples) // s_round
     spkw = tuple(w[:, sp_idx] for w in sskw)  # (r, s_round-1) each
@@ -328,13 +370,14 @@ def _sort_rows(kw, vals, cfg: SortConfig, pad_base: int, stats: list | None):
     # then the column-major prefix sums over (rows, m, s_round).
     spkw_t = tuple(jnp.repeat(w, m, axis=0) for w in spkw)  # (r*m, s_round-1)
     spv_t = jnp.repeat(spv, m, axis=0)
-    if cfg.fuse_ranking:
+    if node.fuse_ranking:
         ranks, counts2 = ops.splitter_partition(
-            tkw, tv, spkw_t, spv_t, impl=cfg.impl, interpret=cfg.interpret,
+            tkw, tv, spkw_t, spv_t, impl=impl, interpret=interpret,
+            block_rows=node.part_block_rows,
         )  # ranks (r*m, s_round-1); counts2 (r*m, s_round)
     else:
         ranks = ops.splitter_ranks(
-            tkw, tv, spkw_t, spv_t, impl=cfg.impl, interpret=cfg.interpret
+            tkw, tv, spkw_t, spv_t, impl=impl, interpret=interpret
         )  # (r*m, s_round-1), values in [0, T]
         ends = jnp.concatenate(
             [ranks, jnp.full((r * m, 1), t, jnp.int32)], axis=1
@@ -350,11 +393,8 @@ def _sort_rows(kw, vals, cfg: SortConfig, pad_base: int, stats: list | None):
     tile_off = jnp.cumsum(counts, axis=1, dtype=jnp.int32) - counts  # (r, m, s_round)
     totals = counts.sum(axis=1, dtype=jnp.int32)  # (r, s_round) true bucket fills
 
-    # Bucket capacity: regular-sampling bound (see DESIGN.md §2).
-    cap = round_up(lp // s_round + lp // sper, 128)
-
     # Step 8: relocation into the dense (r*s_round, cap) bucket array.
-    if cfg.relocation == "gather":
+    if node.relocation == "gather":
         bkw, bv = _relocate_gather(
             tkw, tv, starts, tile_off, totals, r, m, s_round, t, cap, pad_base
         )
@@ -378,36 +418,59 @@ def _sort_rows(kw, vals, cfg: SortConfig, pad_base: int, stats: list | None):
         )
 
     # Step 9: sort every bucket row (recursion), then compact to dense rows.
-    ckw, cv, pad_base = _sort_rows(bkw, bv, cfg, pad_base, stats)
+    ckw, cv, pad_base = _run_node(
+        bkw, bv, node.bucket_plan, impl, interpret, pad_base, stats
+    )
 
     # Compaction: first totals[q, j] entries of bucket row (q, j) are exactly
     # the elements this level relocated there (fresh pads sort after them).
-    if cfg.relocation == "gather":
+    if node.relocation == "gather":
         okw, ov = _compact_gather(ckw, cv, totals, r, s_round, cap, lp)
     else:
         okw, ov = _compact_scatter(ckw, cv, totals, r, s_round, cap, lp)
     return tuple(w[:, :length] for w in okw), ov[:, :length], pad_base
 
 
+def _sort_rows(kw, vals, cfg: SortConfig, pad_base: int, stats: list | None):
+    """Plan-building shim over the executor for callers holding canonical
+    word tuples mid-trace (``distributed_sort`` local sorts): builds the
+    words-plan for the (rows, L) shape through the same builder and
+    walks it."""
+    r, length = kw[0].shape
+    p = plan_mod.build_words_plan(length, len(kw), cfg, rows=r)
+    return _run_node(kw, vals, p.root, p.impl, p.interpret, pad_base, stats)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "pad_base0", "with_stats")
+    jax.jit, static_argnames=("plan", "pad_base0", "with_stats")
 )
-def _sort_canonical_packed(keys_words, vals, cfg: SortConfig, pad_base0: int,
+def _sort_canonical_packed(keys_words, vals, plan: SortPlan, pad_base0: int,
                            with_stats: bool = False):
     """Row-native canonical entry: (B, L) key words + int32 payloads.
 
+    ``plan`` is a STATIC argument: equal plans (e.g. the same memoized
+    object, or a plan reloaded from the persistent cache) hash to the
+    same jit cache entry, so repeated same-signature calls trace and
+    compile exactly once (asserted in tests/test_plan.py).
+
     Args:
-        keys_words: tuple of (B, L) uint32 key-word arrays (msw first).
+        keys_words: tuple of (B, L) uint32 key-word arrays (msw first),
+            with B == plan.rows_padded and L == plan.length.
         vals: (B, L) int32 payloads.
+        plan: the static schedule to walk (see ``core/plan.py``).
         pad_base0: must exceed every payload already present in ``vals``
             (per row) so recursion-introduced pads sort after real
             elements.
     Returns:
         (sorted words, sorted vals[, stats]).
     """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1  # python side effect: runs once per TRACE
     stats: list | None = [] if with_stats else None
     kw = tuple(keys_words)
-    skw, sv, pad_base = _sort_rows(kw, vals, cfg, pad_base0, stats)
+    skw, sv, pad_base = _run_node(
+        kw, vals, plan.root, plan.impl, plan.interpret, pad_base0, stats
+    )
     assert pad_base < _INT_MAX, (
         f"pad payload budget exhausted ({pad_base}); reduce L or raise s/tile"
     )
@@ -416,34 +479,58 @@ def _sort_canonical_packed(keys_words, vals, cfg: SortConfig, pad_base0: int,
     return skw, sv
 
 
-def _sort_canonical_rows(kw, cfg: SortConfig, with_stats: bool = False):
+def resolve_plan(length: int, dtype, cfg: SortConfig, *, rows: int = 1,
+                 pad_rows: bool = False) -> SortPlan:
+    """Obtain the plan for a sort signature per ``cfg.plan``:
+
+      * ``"default"``  — :func:`repro.core.plan.build_plan` (memoized);
+      * ``"autotune"`` — measured-best plan via ``core/autotune``
+        (persistent on-disk cache; tunes on the first miss);
+      * a path — a plan file saved by ``autotune.save_plan``; its
+        signature must match (ValueError otherwise).
+    """
+    if cfg.plan == "default":
+        return build_plan(length, dtype, cfg, rows=rows, pad_rows=pad_rows)
+    from repro.core import autotune  # deferred: autotune imports us
+
+    if cfg.plan == "autotune":
+        return autotune.plan_for(
+            length, dtype, cfg, rows=rows, pad_rows=pad_rows
+        )
+    return autotune.load_plan(
+        cfg.plan, length=length, dtype=dtype, cfg=cfg, rows=rows,
+        pad_rows=pad_rows,
+    )
+
+
+def _sort_canonical_rows(kw, plan: SortPlan, with_stats: bool = False):
     """(B, L) canonical sort with payload = original index within the row."""
     b, n = kw[0].shape
     vals = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
-    return _sort_canonical_packed(kw, vals, cfg, n, with_stats)
+    return _sort_canonical_packed(kw, vals, plan, n, with_stats)
 
 
-def _sort_canonical(kw, cfg: SortConfig, with_stats: bool = False):
+def _sort_canonical(kw, plan: SortPlan, with_stats: bool = False):
     """1-D canonical entry (single logical row of the batched path)."""
-    out = _sort_canonical_rows(tuple(w[None, :] for w in kw), cfg, with_stats)
+    out = _sort_canonical_rows(tuple(w[None, :] for w in kw), plan, with_stats)
     skw = tuple(w[0] for w in out[0])
     if with_stats:
         return skw, out[1][0], out[2]
     return skw, out[1][0]
 
 
-def _pad_rows(kw, vals, cfg: SortConfig):
-    """Batch-aware block_rows auto-pick (DESIGN.md §5): on the pallas
-    path, pad the row count to a multiple of cfg.row_pad with all-pad
-    rows so ``auto_block_rows`` always finds a power-of-two divisor
-    >= row_pad and the row-blocked kernels get dense sublane blocks.
-    Returns (kw, vals, original_row_count); callers slice [:b] out.
+def _pad_rows(kw, vals, plan: SortPlan):
+    """Batch-aware block_rows auto-pick (DESIGN.md §5): pad the row
+    count to the plan's ``rows_padded`` with all-pad rows so
+    ``auto_block_rows`` always finds a power-of-two divisor >= row_pad
+    and the row-blocked kernels get dense sublane blocks (the planner
+    applies the rule only on the pallas path).  Returns (kw, vals);
+    callers slice [:plan.rows] out.
     """
     b, length = kw[0].shape
-    impl = cfg.impl or ops.default_impl()
-    if impl != "pallas" or cfg.row_pad <= 1 or b % cfg.row_pad == 0:
-        return kw, vals, b
-    extra = round_up(b, cfg.row_pad) - b
+    extra = plan.rows_padded - b
+    if extra <= 0:
+        return kw, vals
     pk = jnp.full((extra, length), _MAXU, jnp.uint32)
     pv = jnp.broadcast_to(
         jnp.arange(length, dtype=jnp.int32)[None, :], (extra, length)
@@ -451,7 +538,6 @@ def _pad_rows(kw, vals, cfg: SortConfig):
     return (
         tuple(jnp.concatenate([w, pk], axis=0) for w in kw),
         jnp.concatenate([vals, pv], axis=0),
-        b,
     )
 
 
@@ -482,7 +568,8 @@ def sort(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
     if keys.shape[0] <= 1:
         return keys
     codec = codec_for(keys.dtype, cfg.descending)
-    su, _ = _sort_canonical(codec.encode(keys), cfg)
+    plan = resolve_plan(keys.shape[0], keys.dtype, cfg)
+    su, _ = _sort_canonical(codec.encode(keys), plan)
     return codec.decode(su)
 
 
@@ -507,7 +594,8 @@ def argsort(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
     if keys.shape[0] <= 1:
         return jnp.arange(keys.shape[0], dtype=jnp.int32)
     codec = codec_for(keys.dtype, cfg.descending)
-    _, perm = _sort_canonical(codec.encode(keys), cfg)
+    plan = resolve_plan(keys.shape[0], keys.dtype, cfg)
+    _, perm = _sort_canonical(codec.encode(keys), plan)
     return perm
 
 
@@ -526,7 +614,8 @@ def sort_kv(keys: jax.Array, values: jax.Array, cfg: SortConfig = DEFAULT_CONFIG
     if n <= 1:
         return keys, values
     codec = codec_for(keys.dtype, cfg.descending)
-    su, perm = _sort_canonical(codec.encode(keys), cfg)
+    plan = resolve_plan(n, keys.dtype, cfg)
+    su, perm = _sort_canonical(codec.encode(keys), plan)
     return codec.decode(su), jnp.take(values, perm, axis=0)
 
 
@@ -546,8 +635,56 @@ def sort_with_stats(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
     if n <= 1:
         return keys, jnp.arange(n, dtype=jnp.int32), []
     codec = codec_for(keys.dtype, cfg.descending)
-    su, perm, stats = _sort_canonical(codec.encode(keys), cfg, with_stats=True)
+    plan = resolve_plan(n, keys.dtype, cfg)
+    su, perm, stats = _sort_canonical(
+        codec.encode(keys), plan, with_stats=True
+    )
     return codec.decode(su), perm, stats
+
+
+def sort_planned(keys: jax.Array, plan: SortPlan) -> jax.Array:
+    """Sort with an EXPLICIT :class:`~repro.core.plan.SortPlan`.
+
+    The autotuner's measurement entry and the zero-retrace serving
+    path: the plan is the jit static argument, so every call carrying
+    an equal plan (the memoized builder object, or one reloaded from
+    the persistent cache) reuses one compiled executable.
+
+    Args:
+        keys: 1-D (plan.rows == 1) or 2-D (B, L) array whose
+            shape/dtype match the plan signature.
+        plan: a plan from :func:`repro.core.plan.build_plan`,
+            ``autotune.plan_for``, or ``autotune.load_plan``.
+    Returns:
+        Sorted array of keys' shape/dtype (each row independently for
+        2-D), descending iff the plan was built from a descending cfg.
+    Raises:
+        ValueError: when keys' shape or dtype do not match the plan.
+    """
+    shape = (
+        (1, keys.shape[0]) if keys.ndim == 1
+        else (keys.shape[0], keys.shape[1])
+    )
+    if shape != (plan.rows, plan.length) or (
+        jnp.dtype(keys.dtype).name != plan.dtype_name
+    ):
+        raise ValueError(
+            f"keys {keys.shape}/{jnp.dtype(keys.dtype).name} do not match "
+            f"plan signature rows={plan.rows} length={plan.length} "
+            f"dtype={plan.dtype_name}"
+        )
+    if plan.length <= 1:
+        return keys
+    codec = codec_for(keys.dtype, plan.descending)
+    if keys.ndim == 1:
+        su, _ = _sort_canonical(codec.encode(keys), plan)
+        return codec.decode(su)
+    vals = jnp.broadcast_to(
+        jnp.arange(plan.length, dtype=jnp.int32)[None, :], keys.shape
+    )
+    kw, vals = _pad_rows(codec.encode(keys), vals, plan)
+    sk, _ = _sort_canonical_packed(kw, vals, plan, plan.length)
+    return codec.decode(tuple(w[:plan.rows] for w in sk))
 
 
 # ----------------------------------------------------------------------
@@ -556,18 +693,19 @@ def sort_with_stats(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
 
 
 def _batched_entry(keys, cfg: SortConfig):
-    """Shared batched preamble: canonical key words, per-row index
-    payloads, row_pad alignment.  Returns (codec, kw, vals, b) — slice
-    results [:b]."""
+    """Shared batched preamble: plan resolution, canonical key words,
+    per-row index payloads, row_pad alignment.  Returns
+    (codec, plan, kw, vals, b) — slice results [:b]."""
     b, length = keys.shape
     codec = codec_for(keys.dtype, cfg.descending)
-    kw, vals, _ = _pad_rows(
+    plan = resolve_plan(length, keys.dtype, cfg, rows=b, pad_rows=True)
+    kw, vals = _pad_rows(
         codec.encode(keys),
         jnp.broadcast_to(jnp.arange(length, dtype=jnp.int32)[None, :],
                          (b, length)),
-        cfg,
+        plan,
     )
-    return codec, kw, vals, b
+    return codec, plan, kw, vals, b
 
 
 def sort_batched(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
@@ -587,8 +725,8 @@ def sort_batched(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array
     b, length = keys.shape
     if b == 0 or length <= 1:
         return keys
-    codec, kw, vals, b = _batched_entry(keys, cfg)
-    sk, _ = _sort_canonical_packed(kw, vals, cfg, length)
+    codec, plan, kw, vals, b = _batched_entry(keys, cfg)
+    sk, _ = _sort_canonical_packed(kw, vals, plan, length)
     return codec.decode(tuple(w[:b] for w in sk))
 
 
@@ -607,8 +745,8 @@ def argsort_batched(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
         return jnp.broadcast_to(
             jnp.arange(length, dtype=jnp.int32)[None, :], (b, length)
         )
-    _, kw, vals, b = _batched_entry(keys, cfg)
-    _, perm = _sort_canonical_packed(kw, vals, cfg, length)
+    _, plan, kw, vals, b = _batched_entry(keys, cfg)
+    _, perm = _sort_canonical_packed(kw, vals, plan, length)
     return perm[:b]
 
 
@@ -629,8 +767,8 @@ def sort_kv_batched(keys: jax.Array, values: jax.Array,
     b, length = keys.shape
     if b == 0 or length <= 1:
         return keys, values
-    codec, kw, vals, b = _batched_entry(keys, cfg)
-    sk, perm = _sort_canonical_packed(kw, vals, cfg, length)
+    codec, plan, kw, vals, b = _batched_entry(keys, cfg)
+    sk, perm = _sort_canonical_packed(kw, vals, plan, length)
     sk, perm = tuple(w[:b] for w in sk), perm[:b]
     idx = perm.reshape(perm.shape + (1,) * (values.ndim - 2))
     sv = jnp.take_along_axis(values, idx, axis=1)
@@ -652,9 +790,9 @@ def sort_batched_with_stats(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
             jnp.arange(length, dtype=jnp.int32)[None, :], (b, length)
         )
         return keys, perm, []
-    codec, kw, vals, b = _batched_entry(keys, cfg)
+    codec, plan, kw, vals, b = _batched_entry(keys, cfg)
     sk, perm, stats = _sort_canonical_packed(
-        kw, vals, cfg, length, with_stats=True
+        kw, vals, plan, length, with_stats=True
     )
     return codec.decode(tuple(w[:b] for w in sk)), perm[:b], stats
 
@@ -707,7 +845,7 @@ def _segment_sorted_packed(x: jax.Array, segment_offsets, cfg: SortConfig):
     """
     n = x.shape[0]
     layout = _segment_layout(n, segment_offsets)
-    _, _, w, valid, src, _, _ = layout
+    _, lens, w, valid, src, _, _ = layout
     codec = codec_for(x.dtype, cfg.descending)
     kw = codec.encode(x)
     validj = jnp.asarray(valid)
@@ -715,8 +853,12 @@ def _segment_sorted_packed(x: jax.Array, segment_offsets, cfg: SortConfig):
     col = jnp.asarray(np.arange(max(w, 1)), jnp.int32)[None, :]
     pkw = tuple(jnp.where(validj, u[srcj], _MAXU) for u in kw)
     pv = jnp.where(validj, col, jnp.int32(w) + col)
-    pkw, pv, s_orig = _pad_rows(pkw, pv, cfg)
-    skw, sv = _sort_canonical_packed(pkw, pv, cfg, 2 * max(w, 1))
+    s_orig = lens.size
+    plan = resolve_plan(
+        max(w, 1), x.dtype, cfg, rows=s_orig, pad_rows=True
+    )
+    pkw, pv = _pad_rows(pkw, pv, plan)
+    skw, sv = _sort_canonical_packed(pkw, pv, plan, 2 * max(w, 1))
     return codec, tuple(u[:s_orig] for u in skw), sv[:s_orig], layout
 
 

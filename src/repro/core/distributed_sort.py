@@ -48,8 +48,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.bucket_sort import _sort_rows
+from repro.core.bucket_sort import _run_node
 from repro.core.key_codec import codec_for
+from repro.core.plan import build_words_plan
 from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, round_up
 from repro.kernels import ops
 from repro.kernels.bitonic import as_words, like_words
@@ -105,8 +106,14 @@ class DistSortSpec:
 
 
 def _local_sort(kw, v, cfg, pad_base):
-    skw, sv, _ = _sort_rows(
-        tuple(w[None, :] for w in kw), v[None, :], cfg, pad_base, None
+    """Plan-driven local sort: every per-shard sort builds its static
+    schedule through the same ``core/plan`` builder as the single-device
+    pipeline (all shard lengths are trace-time ints) and hands it to the
+    plan executor."""
+    p = build_words_plan(kw[0].shape[0], len(kw), cfg)
+    skw, sv, _ = _run_node(
+        tuple(w[None, :] for w in kw), v[None, :], p.root, p.impl,
+        p.interpret, pad_base, None,
     )
     return tuple(w[0] for w in skw), sv[0]
 

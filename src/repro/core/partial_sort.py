@@ -22,6 +22,12 @@ serving-shaped (B, vocab) batch in ONE launch (DESIGN.md §5): tiles of
 all rows sort together, splitters/thresholds are per row, and the
 candidate pack is a scatter-free gather (binary search over the per-row
 tile candidate-count prefix sums, like the step-8 relocation).
+
+Scheduling follows the planner/executor split (DESIGN.md §7): the
+one-round geometry (lp, m, cap, ccap, kernel block sizes, resolved
+backend) is computed once by ``core/plan.build_topk_plan`` and the
+jit'd bodies below consume the frozen ``TopkPlan`` as their static
+argument instead of re-deriving it per trace.
 """
 
 from __future__ import annotations
@@ -33,7 +39,8 @@ import jax.numpy as jnp
 
 from repro.core.bucket_sort import _chunk_search
 from repro.core.key_codec import codec_for
-from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, next_pow2, round_up
+from repro.core.plan import TopkPlan, build_topk_plan
+from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, next_pow2
 from repro.kernels import ops
 
 _MAXU = jnp.uint32(0xFFFFFFFF)
@@ -55,23 +62,26 @@ def _pad_pow2(kw, v2):
     )
 
 
-def _sort_small(kw, v1, cfg):
+def _sort_small(kw, v1, tplan: TopkPlan):
     """Bitonic sort of a single row (pads with (all-ones, IMAX) go last)."""
     n = kw[0].shape[0]
     skw, sv = ops.sort_tiles(
         *_pad_pow2(tuple(w[None] for w in kw), v1[None]),
-        impl=cfg.impl, interpret=cfg.interpret,
+        impl=tplan.impl, interpret=tplan.interpret,
     )
     return tuple(w[0, :n] for w in skw), sv[0, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "cfg"))
-def _smallest_k(kw, k: int, cfg: SortConfig):
+@functools.partial(jax.jit, static_argnames=("tplan",))
+def _smallest_k(kw, tplan: TopkPlan):
     """Ascending smallest-k of canonical key words; payload = original
-    index.  kw: tuple of (n,) uint32 word arrays (msw first)."""
+    index.  kw: tuple of (n,) uint32 word arrays (msw first); every
+    static quantity (lp, m, cap, ccap, kernel geometry) is read off the
+    :class:`repro.core.plan.TopkPlan`."""
     (n,) = kw[0].shape
-    t, s = cfg.tile, cfg.s
-    lp = round_up(n, t)
+    k = tplan.k
+    t, s = tplan.tile, tplan.s
+    lp = tplan.lp
     vals = jnp.arange(n, dtype=jnp.int32)
     if lp > n:  # pad with MAX pairs: never candidates for smallest-k
         kw = tuple(
@@ -79,19 +89,20 @@ def _smallest_k(kw, k: int, cfg: SortConfig):
             for w in kw
         )
         vals = jnp.concatenate([vals, jnp.full((lp - n,), _IMAX, jnp.int32)])
-    m = lp // t
+    m = tplan.m
 
     # steps 1-2: tile sort
     tkw, tv = ops.sort_tiles(
         tuple(w.reshape(m, t) for w in kw), vals.reshape(m, t),
-        impl=cfg.impl, interpret=cfg.interpret,
+        impl=tplan.impl, interpret=tplan.interpret,
+        block_rows=tplan.block_rows,
     )
 
     # steps 3-5: samples -> sorted samples -> s-1 splitters
     samp_idx = (jnp.arange(1, s + 1, dtype=jnp.int32) * (t // s)) - 1
     skw, sv = _sort_small(
         tuple(w[:, samp_idx].reshape(m * s) for w in tkw),
-        tv[:, samp_idx].reshape(m * s), cfg,
+        tv[:, samp_idx].reshape(m * s), tplan,
     )
     sp_idx = (jnp.arange(1, s, dtype=jnp.int32) * (m * s)) // s
     spkw = tuple(jnp.broadcast_to(w[sp_idx], (m, s - 1)) for w in skw)
@@ -99,16 +110,15 @@ def _smallest_k(kw, k: int, cfg: SortConfig):
 
     # step 6: ranks
     ranks = ops.splitter_ranks(
-        tkw, tv, spkw, spv, impl=cfg.impl, interpret=cfg.interpret
+        tkw, tv, spkw, spv, impl=tplan.impl, interpret=tplan.interpret
     )  # (m, s-1)
     glob_ranks = ranks.sum(axis=0, dtype=jnp.int32)  # (s-1,)
 
     # θ = smallest splitter with global rank >= k; candidates = elements < θ.
     # Bucket bound: candidate count < k + cap.  If no splitter qualifies,
     # the last bucket alone exceeds lp - k, hence cap > lp - k and the
-    # static capacity below already covers taking ALL elements.
-    cap = round_up(2 * lp // s, 128)
-    ccap = round_up(min(k + cap, lp), 128)
+    # static capacity (plan-carried) already covers taking ALL elements.
+    ccap = tplan.ccap
     qualifies = glob_ranks >= k  # monotone
     any_q = jnp.any(qualifies)
     theta = jnp.argmax(qualifies).astype(jnp.int32)  # first True (or 0)
@@ -134,7 +144,7 @@ def _smallest_k(kw, k: int, cfg: SortConfig):
     cv = jnp.full((ccap + 1,), _IMAX, jnp.int32)
     cv = cv.at[dest].set(tv.reshape(-1), mode="drop")[:ccap]
 
-    fkw, fv = _sort_small(ckw, cv, cfg)
+    fkw, fv = _sort_small(ckw, cv, tplan)
     return tuple(w[:k] for w in fkw), fv[:k]
 
 
@@ -161,12 +171,13 @@ def topk(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
     n = x.shape[0]
     assert 1 <= k <= n
     codec = codec_for(x.dtype, descending=True)
+    tplan = build_topk_plan(n, k, x.dtype, cfg)
     kw = codec.encode(x)  # ascending canonical == descending score
-    if n <= cfg.direct_max:
-        fkw, fv = _sort_small(kw, jnp.arange(n, dtype=jnp.int32), cfg)
+    if n <= tplan.direct_max:
+        fkw, fv = _sort_small(kw, jnp.arange(n, dtype=jnp.int32), tplan)
         fkw, fv = tuple(w[:k] for w in fkw), fv[:k]
     else:
-        fkw, fv = _smallest_k(kw, k, cfg)
+        fkw, fv = _smallest_k(kw, tplan)
     return codec.decode(fkw), fv
 
 
@@ -175,24 +186,25 @@ def topk(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
 # ----------------------------------------------------------------------
 
 
-def _sort_small_rows(kw, v2, cfg):
+def _sort_small_rows(kw, v2, tplan: TopkPlan):
     """Bitonic sort of each row of (r, L) (pads with (all-ones, IMAX) last)."""
     n = kw[0].shape[1]
     skw, sv = ops.sort_tiles(
-        *_pad_pow2(kw, v2), impl=cfg.impl, interpret=cfg.interpret,
-        block_rows=cfg.block_rows,
+        *_pad_pow2(kw, v2), impl=tplan.impl, interpret=tplan.interpret,
+        block_rows=tplan.raw_block_rows,
     )
     return tuple(w[:, :n] for w in skw), sv[:, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "cfg"))
-def _smallest_k_rows(kw, k: int, cfg: SortConfig):
+@functools.partial(jax.jit, static_argnames=("tplan",))
+def _smallest_k_rows(kw, tplan: TopkPlan):
     """Per-row ascending smallest-k of (B, n) canonical key words;
     payload = original column index.  One bucket round for the whole
-    batch; the threshold θ and candidate set are per row."""
+    batch (geometry plan-carried); θ and the candidate set are per row."""
     b, n = kw[0].shape
-    t, s = cfg.tile, cfg.s
-    lp = round_up(n, t)
+    k = tplan.k
+    t, s = tplan.tile, tplan.s
+    lp = tplan.lp
     vals = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
     if lp > n:  # pad with MAX pairs: never candidates for smallest-k
         kw = tuple(
@@ -204,12 +216,13 @@ def _smallest_k_rows(kw, k: int, cfg: SortConfig):
         vals = jnp.concatenate(
             [vals, jnp.full((b, lp - n), _IMAX, jnp.int32)], axis=1
         )
-    m = lp // t
+    m = tplan.m
 
     # steps 1-2: tile sort, all rows' tiles in one launch
     tkw, tv = ops.sort_tiles(
         tuple(w.reshape(b * m, t) for w in kw), vals.reshape(b * m, t),
-        impl=cfg.impl, interpret=cfg.interpret, block_rows=cfg.block_rows,
+        impl=tplan.impl, interpret=tplan.interpret,
+        block_rows=tplan.block_rows,
     )
 
     # steps 3-5: per-row samples -> sorted sample rows -> s-1 splitters
@@ -217,7 +230,7 @@ def _smallest_k_rows(kw, k: int, cfg: SortConfig):
     sskw, ssv = _sort_small_rows(
         tuple(w[:, samp_idx].reshape(b, m * s) for w in tkw),
         tv[:, samp_idx].reshape(b, m * s),
-        cfg,
+        tplan,
     )
     sp_idx = (jnp.arange(1, s, dtype=jnp.int32) * (m * s)) // s
     spkw_t = tuple(jnp.repeat(w[:, sp_idx], m, axis=0) for w in sskw)
@@ -225,14 +238,13 @@ def _smallest_k_rows(kw, k: int, cfg: SortConfig):
 
     # step 6: ranks, reduced per row
     ranks = ops.splitter_ranks(
-        tkw, tv, spkw_t, spv_t, impl=cfg.impl, interpret=cfg.interpret
+        tkw, tv, spkw_t, spv_t, impl=tplan.impl, interpret=tplan.interpret
     ).reshape(b, m, s - 1)
     glob_ranks = ranks.sum(axis=1, dtype=jnp.int32)  # (b, s-1)
 
     # Per-row θ: smallest splitter with global rank >= k (see _smallest_k
     # for why ccap always covers the candidate count).
-    cap = round_up(2 * lp // s, 128)
-    ccap = round_up(min(k + cap, lp), 128)
+    ccap = tplan.ccap
     qualifies = glob_ranks >= k  # (b, s-1), monotone per row
     any_q = jnp.any(qualifies, axis=1)  # (b,)
     theta = jnp.argmax(qualifies, axis=1).astype(jnp.int32)  # (b,)
@@ -261,7 +273,7 @@ def _smallest_k_rows(kw, k: int, cfg: SortConfig):
     cv = jnp.where(valid, jnp.take(tv.reshape(-1), src).reshape(b, ccap),
                    _IMAX)
 
-    fkw, fv = _sort_small_rows(ckw, cv, cfg)
+    fkw, fv = _sort_small_rows(ckw, cv, tplan)
     return tuple(w[:, :k] for w in fkw), fv[:, :k]
 
 
@@ -285,11 +297,12 @@ def topk_batched(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
     if b == 0:
         return (jnp.zeros((0, k), x.dtype), jnp.zeros((0, k), jnp.int32))
     codec = codec_for(x.dtype, descending=True)
+    tplan = build_topk_plan(n, k, x.dtype, cfg, rows=b)
     kw = codec.encode(x)  # ascending canonical == descending score
-    if n <= cfg.direct_max:
+    if n <= tplan.direct_max:
         vals = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
-        fkw, fv = _sort_small_rows(kw, vals, cfg)
+        fkw, fv = _sort_small_rows(kw, vals, tplan)
         fkw, fv = tuple(w[:, :k] for w in fkw), fv[:, :k]
     else:
-        fkw, fv = _smallest_k_rows(kw, k, cfg)
+        fkw, fv = _smallest_k_rows(kw, tplan)
     return codec.decode(fkw), fv

@@ -1,0 +1,527 @@
+"""Sort-plan IR: the static schedule of GPU BUCKET SORT as data.
+
+The paper's deterministic regular sampling makes every quantity of the
+multi-level pipeline a *static* function of ``(shape, dtype, config)``:
+recursion levels, per-level ``rows x tile`` geometry, ``s_round``,
+bucket capacities, pad budgets, kernel block sizes, fusion and
+relocation choices.  Nothing is data-dependent — that is the theorem
+that lets the whole sort run under XLA's static shapes (DESIGN.md §2).
+
+This module reifies that schedule as a frozen, hashable IR
+(:class:`SortPlan` / :class:`LevelPlan`) computed ONCE by
+:func:`build_plan` and merely *walked* by the executor in
+``core/bucket_sort.py``.  The split buys three things (DESIGN.md §7):
+
+  * the executor's step functions take plan fields instead of
+    re-deriving geometry, so one mechanism drives the 1-D, batched,
+    segmented, partial (top-k) and distributed entry points;
+  * plans are jit static arguments — equal plans hit the same compiled
+    executable, so a plan-cache hit means ZERO retraces;
+  * plans serialize (:func:`plan_to_dict` / :func:`plan_from_dict`)
+    byte-stably, which is what the ``core/autotune.py`` persistent plan
+    cache stores and reloads.
+
+``build_plan`` is pure and deterministic: the same
+``(length, dtype, cfg, rows)`` produces a byte-identical plan
+(property-tested in ``tests/test_plan.py``).  The only environment
+inputs are the resolved backend/impl/interpret defaults, which are part
+of the plan's identity (and of the autotune cache key).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+
+import jax
+
+from repro.core.key_codec import codec_for
+from repro.core.sort_config import SortConfig, next_pow2, round_up
+
+# Static recursion depth guard: the level count shrinks geometrically
+# (cap < lp and m*s < lp for s < tile), so real plans are < 8 levels
+# deep; hitting this means a degenerate config (e.g. s == tile with
+# length > direct_max, where the sample array never shrinks).
+_MAX_DEPTH = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelPlan:
+    """One node of the static recursion tree (all trace-time ints).
+
+    ``kind == "direct"``: single-tile bitonic sort of each (rows, lp)
+    row, lp = next_pow2(length).  ``kind == "bucket"``: one bucket
+    round — local tile sort, sample recursion (``sample_plan``),
+    splitter partition, relocation into the dense (rows*s_round, cap)
+    bucket array, bucket recursion (``bucket_plan``), compaction.
+
+    Attributes:
+        kind: "direct" | "bucket".
+        rows: row count entering this level.
+        length: row length entering this level (pre-padding).
+        lp: padded row length (direct: next power of two; bucket:
+            rounded up to a tile multiple).
+        block_rows: resolved tiles-per-grid-program for the level's
+            bitonic sort (None on the xla path) — plan-carried kernel
+            geometry, already a power-of-two divisor of the tile count.
+        tile / s: the level's tile width T and samples per tile
+            (bucket levels only; 0 for direct).
+        m: tiles per row (lp // tile).
+        s_round: buckets this round (equidistant global splitters + 1).
+        cap: static per-bucket capacity — the paper's regular-sampling
+            bound round_up(lp/s_round + lp/s, 128) (DESIGN.md §2).
+        part_block_rows: resolved block size of the fused
+            splitter-partition kernel (None when unfused / xla).
+        fuse_sampling / fuse_ranking / relocation: per-level pipeline
+            choices (today uniform across levels, copied from cfg).
+        sample_plan: step-4 recursion on the (rows, m*s) sample array.
+        bucket_plan: step-9 recursion on the (rows*s_round, cap)
+            bucket rows.
+    """
+
+    kind: str
+    rows: int
+    length: int
+    lp: int
+    block_rows: int | None
+    tile: int = 0
+    s: int = 0
+    m: int = 0
+    s_round: int = 0
+    cap: int = 0
+    part_block_rows: int | None = None
+    fuse_sampling: bool = False
+    fuse_ranking: bool = False
+    relocation: str = "gather"
+    sample_plan: "LevelPlan | None" = None
+    bucket_plan: "LevelPlan | None" = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SortPlan:
+    """The full static schedule of one sort signature.
+
+    Frozen and hashable: used as a jit static argument, so two calls
+    carrying equal plans share one compiled executable.
+
+    Attributes:
+        rows: entry row count (1 for the 1-D API, B for batched).
+        length: entry row length L.
+        dtype_name: canonical key dtype name (``jnp.dtype(...).name``).
+        num_words: uint32 key words per element (codec).
+        descending: order baked into the key codec.
+        impl: resolved implementation ("pallas" | "xla").
+        interpret: resolved Pallas interpret mode.
+        backend: jax.default_backend() at build time (cache key part).
+        rows_padded: rows after batch row-padding (== rows unless the
+            batched pallas path pads to a cfg.row_pad multiple).
+        cfg_fingerprint: stable hash of the generating config (every
+            field except ``plan`` — see :func:`config_fingerprint`).
+        root: the level tree the executor walks.
+    """
+
+    rows: int
+    length: int
+    dtype_name: str
+    num_words: int
+    descending: bool
+    impl: str
+    interpret: bool
+    backend: str
+    rows_padded: int
+    cfg_fingerprint: str
+    root: LevelPlan
+
+    @property
+    def num_levels(self) -> int:
+        """Bucket rounds on the main (bucket_plan) spine."""
+        n, node = 0, self.root
+        while node is not None and node.kind == "bucket":
+            n += 1
+            node = node.bucket_plan
+        return n
+
+    def signature(self) -> tuple:
+        """The cache identity: (shape, dtype, backend, cfg-fingerprint)."""
+        return (
+            self.rows,
+            self.length,
+            self.dtype_name,
+            self.descending,
+            self.impl,
+            self.interpret,
+            self.backend,
+            self.cfg_fingerprint,
+        )
+
+    def describe(self) -> str:
+        """Human-readable one-plan summary (levels and geometry)."""
+        lines = [
+            f"SortPlan(rows={self.rows}->{self.rows_padded}, "
+            f"length={self.length}, dtype={self.dtype_name}"
+            f"{' desc' if self.descending else ''}, impl={self.impl}, "
+            f"levels={self.num_levels})"
+        ]
+        node, depth = self.root, 0
+        while node is not None:
+            if node.kind == "direct":
+                lines.append(
+                    f"  L{depth}: direct rows={node.rows} lp={node.lp} "
+                    f"block_rows={node.block_rows}"
+                )
+                break
+            lines.append(
+                f"  L{depth}: bucket rows={node.rows} lp={node.lp} "
+                f"tile={node.tile} s={node.s} m={node.m} "
+                f"s_round={node.s_round} cap={node.cap} "
+                f"block_rows={node.block_rows} reloc={node.relocation}"
+            )
+            node = node.bucket_plan
+            depth += 1
+        return "\n".join(lines)
+
+
+def config_fingerprint(cfg: SortConfig) -> str:
+    """Stable hash of every SortConfig field except ``plan`` itself.
+
+    The ``plan`` field selects HOW a plan is obtained (default /
+    autotune / file); it must not perturb the identity of the plans the
+    cache is keyed by, or a cached plan could never match the config
+    that requests it.
+    """
+    d = dataclasses.asdict(cfg)
+    d.pop("plan", None)
+    blob = json.dumps(d, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _resolve_backend(cfg: SortConfig) -> tuple[str, bool, str]:
+    """(impl, interpret, backend) with the cfg Nones resolved."""
+    from repro.kernels import ops  # local import: ops imports core.key_codec
+
+    impl = cfg.impl or ops.default_impl()
+    interpret = (
+        ops.default_interpret() if cfg.interpret is None else cfg.interpret
+    )
+    return impl, interpret, jax.default_backend()
+
+
+def _sort_block_rows(
+    impl: str, tiles: int, t: int, cfg_block_rows: int | None, nw: int
+) -> int | None:
+    from repro.kernels import bitonic
+
+    if impl != "pallas":
+        return None
+    return bitonic.effective_block_rows(tiles, t, cfg_block_rows, num_words=nw)
+
+
+def _build_node(
+    rows: int, length: int, cfg: SortConfig, impl: str, nw: int, depth: int
+) -> LevelPlan:
+    if depth > _MAX_DEPTH:
+        raise ValueError(
+            "sort-plan recursion exceeded depth "
+            f"{_MAX_DEPTH} at (rows={rows}, length={length}); degenerate "
+            "config (s == tile with length > direct_max never shrinks "
+            "the sample array)"
+        )
+    if length <= cfg.direct_max:
+        lp = next_pow2(length)
+        return LevelPlan(
+            kind="direct",
+            rows=rows,
+            length=length,
+            lp=lp,
+            block_rows=_sort_block_rows(impl, rows, lp, cfg.block_rows, nw),
+        )
+
+    t, sper = cfg.tile, cfg.s
+    lp = round_up(length, t)
+    m = lp // t
+    # Step 5: s_round - 1 equidistant global splitters (s_round buckets).
+    s_round = min(max(next_pow2(-(-2 * lp // t)), 2), sper)
+    # The paper's guaranteed capacity (DESIGN.md §2), lane-aligned.
+    cap = round_up(lp // s_round + lp // sper, 128)
+    part_block_rows = None
+    if impl == "pallas" and cfg.fuse_ranking:
+        from repro.kernels import splitter
+
+        part_block_rows = splitter.partition_block_rows(
+            rows * m, t, s_round - 1, num_words=nw
+        )
+    return LevelPlan(
+        kind="bucket",
+        rows=rows,
+        length=length,
+        lp=lp,
+        block_rows=_sort_block_rows(impl, rows * m, t, cfg.block_rows, nw),
+        tile=t,
+        s=sper,
+        m=m,
+        s_round=s_round,
+        cap=cap,
+        part_block_rows=part_block_rows,
+        fuse_sampling=cfg.fuse_sampling,
+        fuse_ranking=cfg.fuse_ranking,
+        relocation=cfg.relocation,
+        sample_plan=_build_node(rows, m * sper, cfg, impl, nw, depth + 1),
+        bucket_plan=_build_node(
+            rows * s_round, cap, cfg, impl, nw, depth + 1
+        ),
+    )
+
+
+@functools.lru_cache(maxsize=512)
+def _assemble_plan(
+    rows: int,
+    length: int,
+    dtype_name: str,
+    nw: int,
+    descending: bool,
+    cfg: SortConfig,
+    pad_rows: bool,
+    impl: str,
+    interpret: bool,
+    backend: str,
+) -> SortPlan:
+    """Memoized plan assembly: the cache key includes the RESOLVED
+    backend triple, so a changed env/backend can never serve a stale
+    plan, while repeated calls return the SAME object (fast jit static
+    lookups)."""
+    rows_padded = rows
+    if pad_rows and impl == "pallas" and cfg.row_pad > 1 and rows > 0:
+        rows_padded = round_up(rows, cfg.row_pad)
+    return SortPlan(
+        rows=rows,
+        length=length,
+        dtype_name=dtype_name,
+        num_words=nw,
+        descending=descending,
+        impl=impl,
+        interpret=interpret,
+        backend=backend,
+        rows_padded=rows_padded,
+        cfg_fingerprint=config_fingerprint(cfg),
+        root=_build_node(max(rows_padded, 1), length, cfg, impl, nw, 0),
+    )
+
+
+def build_plan(
+    length: int,
+    dtype,
+    cfg: SortConfig,
+    *,
+    rows: int = 1,
+    pad_rows: bool = False,
+) -> SortPlan:
+    """Compute the full static schedule for one sort signature.
+
+    Pure and deterministic: equal inputs produce equal (byte-identical
+    once serialized) plans.  Called once per signature (memoized); the
+    executor in ``core/bucket_sort.py`` only walks the result.
+
+    Args:
+        length: row length L (the 1-D array length, or the row width of
+            the batched/segmented packed array).
+        dtype: key dtype (any ``core/key_codec`` dtype).
+        cfg: pipeline knobs; ``cfg.descending`` is baked into the plan
+            identity, ``cfg.plan`` is NOT (it selects how plans are
+            obtained, see :func:`config_fingerprint`).
+        rows: entry row count (1 for the 1-D API, B for batched).
+        pad_rows: apply the batched-path row padding to a multiple of
+            ``cfg.row_pad`` (DESIGN.md §5) — the batched/segmented
+            entry points pass True, the 1-D path False.
+    Returns:
+        A frozen :class:`SortPlan`.
+
+    Example:
+        >>> from repro.core.plan import build_plan
+        >>> from repro.core.sort_config import SortConfig
+        >>> p = build_plan(100_000, "int32", SortConfig(impl="xla"))
+        >>> (p.length, p.root.kind, p.num_levels >= 1)
+        (100000, 'bucket', True)
+    """
+    import jax.numpy as jnp
+
+    codec = codec_for(dtype, cfg.descending)
+    impl, interpret, backend = _resolve_backend(cfg)
+    return _assemble_plan(
+        rows, length, jnp.dtype(dtype).name, codec.num_words,
+        cfg.descending, cfg, pad_rows, impl, interpret, backend,
+    )
+
+
+def build_words_plan(
+    length: int,
+    num_words: int,
+    cfg: SortConfig,
+    *,
+    rows: int = 1,
+    pad_rows: bool = False,
+) -> SortPlan:
+    """Plan for callers already holding CANONICAL uint32 key words
+    (``distributed_sort.sorted_shard``, the recursion shims): the
+    canonical domain is always ascending, so there is no dtype/codec —
+    only the word count matters for geometry."""
+    impl, interpret, backend = _resolve_backend(cfg)
+    return _assemble_plan(
+        rows, length, f"uint32x{num_words}", num_words, False, cfg,
+        pad_rows, impl, interpret, backend,
+    )
+
+
+# ----------------------------------------------------------------------
+# Partial-sort (top-k) plan: the one-bucket-round schedule
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TopkPlan:
+    """Static schedule of the partial sort (one bucket round, steps 1-7
+    + candidate pack + candidate sort — ``core/partial_sort.py``).
+
+    Attributes:
+        rows: batch rows (1 for the 1-D entry).
+        length: scores per row (n / vocab).
+        k: requested top-k.
+        lp: length padded to a tile multiple.
+        m: tiles per row.
+        tile / s: tile width and samples per tile.
+        cap: the bucket-capacity bound round_up(2*lp/s, 128) the
+            threshold argument relies on.
+        ccap: static candidate-buffer width round_up(min(k+cap, lp), 128).
+        block_rows: resolved tile-sort block size (None on xla).
+        raw_block_rows: the unresolved cfg knob, carried as the UPPER
+            BOUND for the small sample/candidate sorts (whose padded
+            widths the kernels clamp against).
+        direct_max: lengths up to this take the direct single-tile path.
+        impl / interpret / backend: resolved as in :class:`SortPlan`.
+    """
+
+    rows: int
+    length: int
+    k: int
+    lp: int
+    m: int
+    tile: int
+    s: int
+    cap: int
+    ccap: int
+    block_rows: int | None
+    raw_block_rows: int | None
+    direct_max: int
+    impl: str
+    interpret: bool
+    backend: str
+
+
+@functools.lru_cache(maxsize=512)
+def _assemble_topk_plan(
+    length: int, k: int, nw: int, cfg: SortConfig, rows: int,
+    impl: str, interpret: bool, backend: str,
+) -> TopkPlan:
+    """Memoized topk-plan assembly; like :func:`_assemble_plan`, the
+    RESOLVED backend triple is part of the cache key so a changed
+    env/backend can never serve a stale plan."""
+    t, sper = cfg.tile, cfg.s
+    lp = round_up(length, t)
+    m = lp // t
+    cap = round_up(2 * lp // sper, 128)
+    ccap = round_up(min(k + cap, lp), 128)
+    return TopkPlan(
+        rows=rows,
+        length=length,
+        k=k,
+        lp=lp,
+        m=m,
+        tile=t,
+        s=sper,
+        cap=cap,
+        ccap=ccap,
+        block_rows=_sort_block_rows(
+            impl, max(rows, 1) * m, t, cfg.block_rows, nw
+        ),
+        raw_block_rows=cfg.block_rows,
+        direct_max=cfg.direct_max,
+        impl=impl,
+        interpret=interpret,
+        backend=backend,
+    )
+
+
+def build_topk_plan(
+    length: int, k: int, dtype, cfg: SortConfig, *, rows: int = 1
+) -> TopkPlan:
+    """Static schedule for :func:`repro.core.partial_sort.topk`.
+
+    Same builder conventions as :func:`build_plan` (pure,
+    deterministic, backend-resolved, memoized).  Lengths <=
+    cfg.direct_max take the direct path and never consult the bucket
+    fields.
+    """
+    codec = codec_for(dtype, descending=True)
+    impl, interpret, backend = _resolve_backend(cfg)
+    return _assemble_topk_plan(
+        length, k, codec.num_words, cfg, rows, impl, interpret, backend
+    )
+
+
+# ----------------------------------------------------------------------
+# Serialization: byte-stable dict/JSON round-trip for the plan cache
+# ----------------------------------------------------------------------
+
+_SCHEMA = "sort_plan/v1"
+
+
+def _node_to_dict(node: LevelPlan | None):
+    if node is None:
+        return None
+    d = dataclasses.asdict(node)
+    d["sample_plan"] = _node_to_dict(node.sample_plan)
+    d["bucket_plan"] = _node_to_dict(node.bucket_plan)
+    return d
+
+
+def _node_from_dict(d) -> LevelPlan | None:
+    if d is None:
+        return None
+    d = dict(d)
+    d["sample_plan"] = _node_from_dict(d.get("sample_plan"))
+    d["bucket_plan"] = _node_from_dict(d.get("bucket_plan"))
+    return LevelPlan(**d)
+
+
+def plan_to_dict(plan: SortPlan) -> dict:
+    """JSON-serializable representation; inverse of :func:`plan_from_dict`.
+
+    ``plan_from_dict(plan_to_dict(p)) == p`` exactly (tested), which is
+    what lets the persistent cache assert a reloaded plan is identical
+    to the one it saved.
+    """
+    d = dataclasses.asdict(plan)
+    d["root"] = _node_to_dict(plan.root)
+    d["schema"] = _SCHEMA
+    return d
+
+
+def plan_from_dict(d: dict) -> SortPlan:
+    """Reconstruct a :class:`SortPlan` saved by :func:`plan_to_dict`.
+
+    Raises:
+        ValueError: on a missing/mismatched schema tag.
+    """
+    d = dict(d)
+    schema = d.pop("schema", None)
+    if schema != _SCHEMA:
+        raise ValueError(f"not a {_SCHEMA} record (schema={schema!r})")
+    d["root"] = _node_from_dict(d["root"])
+    return SortPlan(**d)
+
+
+def plan_json(plan: SortPlan) -> str:
+    """Canonical JSON encoding (sorted keys) — byte-identical for equal
+    plans; the determinism property tests compare these strings."""
+    return json.dumps(plan_to_dict(plan), sort_keys=True)

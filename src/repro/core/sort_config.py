@@ -67,6 +67,15 @@ class SortConfig:
         ``jnp.sort(x, descending=True)``).  Ignored by ``topk`` (top-k
         is descending by definition) and by the ``*_with_stats`` bound
         introspection (bounds are order-agnostic).
+    plan: how the static schedule (``core/plan.SortPlan``) is obtained
+        (DESIGN.md §7):
+          * ``"default"``  — built directly from this config;
+          * ``"autotune"`` — the measured-best plan from
+            ``core/autotune`` (persistent on-disk cache keyed by
+            (shape, dtype, backend, cfg-fingerprint); the first miss
+            runs the tuning search and records the winner);
+          * any other string — a path to a plan file saved by
+            ``autotune.save_plan``; its signature must match the call.
     row_pad: batch-aware block_rows auto-pick (DESIGN.md §5).  The
         batched entry points (``sort_batched``, ``segment_sort``) pad
         the row count up to a multiple of this power of two before
@@ -89,22 +98,54 @@ class SortConfig:
     relocation: str = "gather"
     descending: bool = False
     row_pad: int = 8
+    plan: str = "default"
 
     def __post_init__(self):
-        assert self.tile >= 2 and self.tile & (self.tile - 1) == 0, self.tile
-        assert self.s >= 2 and self.s & (self.s - 1) == 0, self.s
-        assert self.s <= self.tile and self.tile % self.s == 0
-        assert self.direct_max >= self.tile
-        assert self.impl in (None, "pallas", "xla")
+        # Field-by-field validation with errors that NAME the offending
+        # field — a bad knob must fail here, at construction, not as a
+        # shape error deep inside a kernel spec.
+        def _pow2(name, v, lo):
+            if not (isinstance(v, int) and v >= lo and v & (v - 1) == 0):
+                raise ValueError(
+                    f"SortConfig.{name} must be a power of two >= {lo}, "
+                    f"got {v!r}"
+                )
+
+        _pow2("tile", self.tile, 2)
+        _pow2("s", self.s, 2)
+        if self.s > self.tile:
+            raise ValueError(
+                f"SortConfig.s ({self.s}) must not exceed SortConfig.tile "
+                f"({self.tile}): s samples are drawn per tile"
+            )
+        if self.tile % self.s != 0:
+            raise ValueError(
+                f"SortConfig.tile ({self.tile}) must be a multiple of "
+                f"SortConfig.s ({self.s})"
+            )
+        if self.direct_max < self.tile:
+            raise ValueError(
+                f"SortConfig.direct_max ({self.direct_max}) must be >= "
+                f"SortConfig.tile ({self.tile})"
+            )
+        if self.impl not in (None, "pallas", "xla"):
+            raise ValueError(
+                f'SortConfig.impl must be None, "pallas" or "xla", '
+                f"got {self.impl!r}"
+            )
         if self.block_rows is not None:
-            assert (
-                self.block_rows >= 1
-                and self.block_rows & (self.block_rows - 1) == 0
-            ), self.block_rows
-        assert self.relocation in ("gather", "scatter"), self.relocation
-        assert (
-            self.row_pad >= 1 and self.row_pad & (self.row_pad - 1) == 0
-        ), self.row_pad
+            _pow2("block_rows", self.block_rows, 1)
+        if self.relocation not in ("gather", "scatter"):
+            raise ValueError(
+                f'SortConfig.relocation must be "gather" or "scatter", '
+                f"got {self.relocation!r}"
+            )
+        _pow2("row_pad", self.row_pad, 1)
+        if not (isinstance(self.plan, str) and self.plan):
+            raise ValueError(
+                'SortConfig.plan must be "default", "autotune", or a '
+                f"plan-file path, got {self.plan!r}"
+            )
 
 
 # Paper default: s = 64 (Fig. 3 sweep), 2K-item tiles on 16KB shared memory.

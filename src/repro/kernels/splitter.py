@@ -110,6 +110,34 @@ def splitter_ranks(
     )(*words, vals, *sp_words, sp_vals)
 
 
+def partition_block_rows(
+    m: int, t: int, s: int, *, num_words: int = 1,
+    block_rows: int | None = None,
+) -> int:
+    """Resolve the fused-partition kernel's tiles-per-grid-program.
+
+    The single source of truth for the kernel's VMEM model, shared with
+    the plan builder (``core/plan.py``) so plans carry the exact block
+    geometry the kernel will run — idempotent: feeding a resolved value
+    back returns it unchanged.
+
+    Args:
+        m: tile count; t: tile width; s: splitters per tile.
+        num_words: uint32 key words per element.
+        block_rows: optional upper bound (e.g. a plan-carried value).
+    Returns:
+        The largest power-of-two divisor of ``m`` whose per-program
+        comparison matrix + tile buffers fit a 4 MiB VMEM budget.
+    """
+    # (T x S) i32 comparison matrix per row dominates VMEM here (one
+    # lt+eq predicate pair per key word adds to it).
+    per_row = 4 * t * (s + 2) * (num_words + 1) // 2 + 4 * t * (num_words + 1)
+    limit = max((4 * 1024 * 1024) // per_row, 1)
+    if block_rows is not None:
+        limit = min(limit, block_rows)
+    return largest_pow2_divisor(m, limit)
+
+
 def _partition_kernel(*refs, num_words: int):
     nw1 = num_words + 1
     words = tuple(r[...] for r in refs[:num_words])  # (block_rows, T)
@@ -159,13 +187,9 @@ def splitter_partition(
     assert all(w.shape == (m, t) and w.dtype == jnp.uint32 for w in words)
     assert all(w.shape == (m, s) and w.dtype == jnp.uint32 for w in sp_words)
     assert vals.dtype == jnp.int32 and sp_vals.dtype == jnp.int32
-    # (T x S) i32 comparison matrix per row dominates VMEM here (one
-    # lt+eq predicate pair per key word adds to it).
-    per_row = 4 * t * (s + 2) * (nw + 1) // 2 + 4 * t * (nw + 1)
-    limit = max((4 * 1024 * 1024) // per_row, 1)
-    if block_rows is not None:
-        limit = min(limit, block_rows)
-    block_rows = largest_pow2_divisor(m, limit)
+    block_rows = partition_block_rows(
+        m, t, s, num_words=nw, block_rows=block_rows
+    )
     grid = (m // block_rows,)
     tile_spec = pl.BlockSpec((block_rows, t), lambda i: (i, 0))
     sp_spec = pl.BlockSpec((block_rows, s), lambda i: (i, 0))
