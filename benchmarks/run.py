@@ -51,6 +51,7 @@ def main() -> None:
         sample_size_sweep,
         sort_throughput,
         step_breakdown,
+        strategies,
         topk_partial,
     )
 
@@ -78,6 +79,8 @@ def main() -> None:
         "autotune": lambda: autotune_bench.run(
             n=262144 if quick else 1048576,
             max_trials=6 if quick else 12),
+        "strategies": lambda: strategies.run(
+            n=262144 if quick else 1048576),
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

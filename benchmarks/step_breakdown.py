@@ -23,8 +23,7 @@ import numpy as np
 
 from benchmarks.common import timeit
 from repro.core import bucket_sort as bs
-from repro.core.plan import build_words_plan
-from repro.core.sort_config import SortConfig, next_pow2, round_up
+from repro.core.sort_config import SortConfig
 from repro.kernels import ops
 
 CFG = SortConfig(tile=4096, s=64, direct_max=8192, impl="xla")
@@ -34,11 +33,14 @@ def run(n=1048576, repeats=3, pallas_compare=True):
     rng = np.random.default_rng(2)
     x = rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32)
     u = ops.to_sortable(jnp.asarray(x))
-    t, sper = CFG.tile, CFG.s
-    lp = round_up(n, t)
-    m = lp // t
-    s_round = min(max(next_pow2(-(-2 * lp // t)), 2), sper)
-    cap = round_up(lp // s_round + lp // sper, 128)
+    # All geometry comes off the RESOLVED plan (the planner/executor
+    # split, DESIGN.md §7) — the benchmark no longer re-derives it.
+    full_plan = bs.resolve_plan(n, jnp.int32, CFG)
+    root = full_plan.root
+    assert root.kind == "bucket", "step breakdown needs a bucket round"
+    t, sper = root.tile, root.s
+    lp, m = root.lp, root.m
+    s_round, cap = root.s_round, root.cap
     r = 1
 
     # --- Per-step rows (Fig. 5), on the default fused path. -------------
@@ -76,8 +78,6 @@ def run(n=1048576, repeats=3, pallas_compare=True):
 
     ranks, counts2 = jax.block_until_ready(ranks_fn(tk, tv, ssk, ssv))
 
-    full_plan = build_words_plan(n, 1, CFG)
-
     @jax.jit
     def full(u):
         return bs._sort_canonical((u,), full_plan)
@@ -102,6 +102,25 @@ def run(n=1048576, repeats=3, pallas_compare=True):
     rows.append(dict(
         name="step_breakdown/sampling_overhead_fraction", us_per_call=0.0,
         derived=f"{100*overhead:.1f}% (paper C3: small)"))
+
+    # --- Per-strategy local sort (hybrid dispatch, DESIGN.md §8). -------
+    v_st = jnp.arange(lp, dtype=jnp.int32).reshape(m, t)
+    uk_st = u.reshape(m, t) if lp == n else jnp.pad(u, (0, lp - n)).reshape(m, t)
+
+    @functools.partial(jax.jit, static_argnames=("st",))
+    def strat_sort(uk, v, st):
+        return ops.sort_tiles(uk, v, impl="xla", strategy=st)
+
+    st_us: dict[str, float] = {}
+    for st in ("bitonic", "radix", "merge"):
+        st_us[st] = timeit(lambda a, b, s=st: strat_sort(a, b, s),
+                           uk_st, v_st, repeats=repeats)
+        rows.append(dict(
+            name=f"step_breakdown/step2_local_sort_{st}",
+            us_per_call=st_us[st] * 1e6,
+            derived=f"strategy={st} (xla), "
+                    f"{st_us['bitonic'] / max(st_us[st], 1e-12):.2f}x "
+                    f"vs bitonic"))
 
     # --- A/B: scatter vs gather relocation + compaction (steps 8/9). ----
     starts = jnp.concatenate([jnp.zeros((r * m, 1), jnp.int32), ranks], axis=1)

@@ -1,0 +1,73 @@
+"""--suite strategies: local-sort strategy comparison (DESIGN.md §8).
+
+End-to-end plan-driven sorts (``sort_planned``, jit static plan) with
+the ONLY difference being ``SortConfig.strategy``, crossed with the
+input distributions the surveys say discriminate between the
+algorithms: uniform (radix home turf on narrow keys), nearly-sorted
+(merge home turf), skewed and all-dup (low digit entropy — bitonic /
+lax.sort robustness).  All on the CPU/xla proxy of this container; the
+bitonic rows keep the unchanged ``lax.sort`` two-key stand-in, so the
+speedup columns measure exactly what the strategy dispatch buys.
+
+The acceptance rows for ISSUE 6 are the explicitly named
+``radix_vs_bitonic_uniform`` (int32, n=2^20) and
+``merge_vs_bitonic_nearly_sorted`` entries.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import make_distribution, timeit
+from repro.core import bucket_sort as bs
+from repro.core.sort_config import SortConfig
+
+STRATEGIES = ("bitonic", "radix", "merge")
+DISTS = ("uniform", "nearly-sorted", "skewed", "all-dup")
+
+
+def run(n=1048576, repeats=3):
+    rng = np.random.default_rng(11)
+    rows = []
+    for dist in DISTS:
+        x = jnp.asarray(make_distribution(dist, n, rng))
+        us = {}
+        for st in STRATEGIES:
+            cfg = SortConfig(impl="xla", strategy=st)
+            plan = bs.resolve_plan(n, jnp.int32, cfg)
+            t = timeit(
+                lambda a, p=plan: bs.sort_planned(a, p), x, repeats=repeats
+            )
+            us[st] = t * 1e6
+            rows.append(dict(
+                name=f"strategies/{dist}_{st}",
+                us_per_call=us[st],
+                derived=f"int32 n={n} xla end-to-end",
+            ))
+        for st in ("radix", "merge"):
+            rows.append(dict(
+                name=f"strategies/{dist}_{st}_speedup_vs_bitonic",
+                us_per_call=us[st],
+                derived=f"{us['bitonic'] / max(us[st], 1e-9):.2f}x vs "
+                        f"bitonic ({dist}, n={n})",
+            ))
+    # The ISSUE 6 acceptance rows, named explicitly.
+    def _get(nm):
+        return next(r for r in rows if r["name"] == f"strategies/{nm}")
+
+    ub, ur = _get("uniform_bitonic"), _get("uniform_radix")
+    nb, nm_ = _get("nearly-sorted_bitonic"), _get("nearly-sorted_merge")
+    rows.append(dict(
+        name="strategies/radix_vs_bitonic_uniform",
+        us_per_call=ur["us_per_call"],
+        derived=f"{ub['us_per_call'] / max(ur['us_per_call'], 1e-9):.2f}x "
+                f"faster than bitonic (int32 uniform, n={n})",
+    ))
+    rows.append(dict(
+        name="strategies/merge_vs_bitonic_nearly_sorted",
+        us_per_call=nm_["us_per_call"],
+        derived=f"{nb['us_per_call'] / max(nm_['us_per_call'], 1e-9):.2f}x "
+                f"faster than bitonic (int32 nearly-sorted, n={n})",
+    ))
+    return rows

@@ -4,8 +4,9 @@
 # multi-chip/pod distributed variant, partial (top-k) sort, and the
 # baselines the paper compares against.
 
-# NOTE: the tuning entry itself stays namespaced (repro.core.autotune.
-# autotune) — binding the function name here would shadow the submodule.
+# NOTE: the tuning and probing entries themselves stay namespaced
+# (repro.core.autotune.autotune, repro.core.probe.probe) — binding the
+# function name here would shadow the submodule.
 from repro.core.autotune import AutotuneResult, load_plan, plan_for, save_plan
 from repro.core.bucket_sort import (
     argsort,
@@ -24,6 +25,7 @@ from repro.core.bucket_sort import (
 from repro.core.distributed_sort import DistSortSpec, make_sharded_sort, sorted_shard
 from repro.core.key_codec import SUPPORTED_DTYPES, KeyCodec, codec_for
 from repro.core.partial_sort import topk, topk_batched
+from repro.core.probe import probed_config, recommend_strategy
 from repro.core.plan import (
     LevelPlan,
     SortPlan,
@@ -65,6 +67,8 @@ __all__ = [
     "plan_from_dict",
     "plan_to_dict",
     "resolve_plan",
+    "probed_config",
+    "recommend_strategy",
     "AutotuneResult",
     "plan_for",
     "load_plan",

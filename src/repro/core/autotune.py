@@ -169,8 +169,12 @@ def candidate_space(
 
     The BASE config is always candidate 0, so the measured winner is by
     construction at least as fast as the default plan.  The space
-    crosses tile × s × block_rows × fusion × relocation, nearest
-    neighbours first, deduplicated, truncated to ``max_trials``.
+    crosses strategy × tile × s × block_rows × fusion × relocation,
+    nearest neighbours first, deduplicated, truncated to
+    ``max_trials``.  The local-sort strategies (DESIGN.md §8) come
+    right after the base config: they are the highest-variance axis
+    (radix vs merge vs bitonic differ by integer factors across key
+    widths and input distributions).
     """
     tiles = [cfg.tile, cfg.tile * 2, max(cfg.tile // 2, 128), cfg.tile * 4]
     svals = [cfg.s, cfg.s * 2, max(cfg.s // 2, 2), cfg.s * 4]
@@ -213,6 +217,9 @@ def candidate_space(
         out.append(Candidate(cfg=cand, label=bits or "base"))
 
     _add()  # the base config: candidate 0, the speedup reference
+    for st in ("bitonic", "radix", "merge"):
+        if st != cfg.strategy:
+            _add(strategy=st)
     for t in tiles:
         _add(tile=t)
     for s in svals:
@@ -372,9 +379,16 @@ def plan_for(
     store = _load_store(path)
     rec = store["plans"].get(key)
     if rec is not None:
-        plan = plan_from_dict(rec["plan"])
-        _MEMO[key] = plan
-        return plan
+        try:
+            plan = plan_from_dict(rec["plan"])
+        except (ValueError, TypeError):
+            # A record from an older plan schema (e.g. pre-strategy
+            # sort_plan/v1): treat as a clean miss — re-tune below and
+            # overwrite, never misread a stale plan.
+            rec = None
+        else:
+            _MEMO[key] = plan
+            return plan
     result = autotune(
         length, dtype, cfg, rows=rows, pad_rows=pad_rows,
         max_trials=max_trials, repeats=repeats,

@@ -160,13 +160,15 @@ def _pad_cols(kw, vals, new_len, pad_base):
 
 
 def _direct_sort(kw, vals, node: LevelPlan, impl, interpret, pad_base):
-    """Single-tile bitonic sort of each row (rows, L), L <= direct_max;
-    all geometry (pow2-padded width, kernel block size) is plan-carried."""
+    """Single-tile local sort of each row (rows, L), L <= direct_max;
+    all geometry (pow2-padded width, kernel block size) AND the
+    local-sort strategy are plan-carried (DESIGN.md §8)."""
     length = kw[0].shape[1]
     kw, vals, pad_base = _pad_cols(kw, vals, node.lp, pad_base)
     sk, sv = ops.sort_tiles(
         kw, vals, impl=impl, interpret=interpret,
-        block_rows=node.block_rows,
+        block_rows=node.block_rows, strategy=node.strategy,
+        radix_bits=node.radix_bits, merge_run=node.merge_run,
     )
     return tuple(w[:, :length] for w in sk), sv[:, :length], pad_base
 
@@ -342,13 +344,16 @@ def _run_node(kw, vals, node: LevelPlan, impl: str, interpret: bool,
         tkw, tv, samp_kw, samp_v = ops.sort_tiles_sample(
             tkw, tv, num_samples=sper, impl=impl,
             interpret=interpret, block_rows=node.block_rows,
+            strategy=node.strategy, radix_bits=node.radix_bits,
+            merge_run=node.merge_run,
         )
         samples_kw = tuple(w.reshape(r, m * sper) for w in samp_kw)
         samples_v = samp_v.reshape(r, m * sper)
     else:
         tkw, tv = ops.sort_tiles(
             tkw, tv, impl=impl, interpret=interpret,
-            block_rows=node.block_rows,
+            block_rows=node.block_rows, strategy=node.strategy,
+            radix_bits=node.radix_bits, merge_run=node.merge_run,
         )
         samp_idx = (jnp.arange(1, sper + 1, dtype=jnp.int32) * (t // sper)) - 1
         samples_kw = tuple(w[:, samp_idx].reshape(r, m * sper) for w in tkw)

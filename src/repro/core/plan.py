@@ -76,6 +76,11 @@ class LevelPlan:
             splitter-partition kernel (None when unfused / xla).
         fuse_sampling / fuse_ranking / relocation: per-level pipeline
             choices (today uniform across levels, copied from cfg).
+        strategy: the level's local-sort algorithm ("bitonic" | "radix"
+            | "merge") — a PER-LEVEL plan field (DESIGN.md §8); the
+            executor dispatches ``ops.sort_tiles`` on it.
+        radix_bits / merge_run: strategy knobs carried alongside
+            (consulted only by the matching strategy).
         sample_plan: step-4 recursion on the (rows, m*s) sample array.
         bucket_plan: step-9 recursion on the (rows*s_round, cap)
             bucket rows.
@@ -95,6 +100,9 @@ class LevelPlan:
     fuse_sampling: bool = False
     fuse_ranking: bool = False
     relocation: str = "gather"
+    strategy: str = "bitonic"
+    radix_bits: int = 4
+    merge_run: int = 512
     sample_plan: "LevelPlan | None" = None
     bucket_plan: "LevelPlan | None" = None
 
@@ -169,14 +177,15 @@ class SortPlan:
             if node.kind == "direct":
                 lines.append(
                     f"  L{depth}: direct rows={node.rows} lp={node.lp} "
-                    f"block_rows={node.block_rows}"
+                    f"block_rows={node.block_rows} strategy={node.strategy}"
                 )
                 break
             lines.append(
                 f"  L{depth}: bucket rows={node.rows} lp={node.lp} "
                 f"tile={node.tile} s={node.s} m={node.m} "
                 f"s_round={node.s_round} cap={node.cap} "
-                f"block_rows={node.block_rows} reloc={node.relocation}"
+                f"block_rows={node.block_rows} reloc={node.relocation} "
+                f"strategy={node.strategy}"
             )
             node = node.bucket_plan
             depth += 1
@@ -236,6 +245,9 @@ def _build_node(
             length=length,
             lp=lp,
             block_rows=_sort_block_rows(impl, rows, lp, cfg.block_rows, nw),
+            strategy=cfg.strategy,
+            radix_bits=cfg.radix_bits,
+            merge_run=cfg.merge_run,
         )
 
     t, sper = cfg.tile, cfg.s
@@ -267,6 +279,9 @@ def _build_node(
         fuse_sampling=cfg.fuse_sampling,
         fuse_ranking=cfg.fuse_ranking,
         relocation=cfg.relocation,
+        strategy=cfg.strategy,
+        radix_bits=cfg.radix_bits,
+        merge_run=cfg.merge_run,
         sample_plan=_build_node(rows, m * sper, cfg, impl, nw, depth + 1),
         bucket_plan=_build_node(
             rows * s_round, cap, cfg, impl, nw, depth + 1
@@ -398,6 +413,10 @@ class TopkPlan:
             BOUND for the small sample/candidate sorts (whose padded
             widths the kernels clamp against).
         direct_max: lengths up to this take the direct single-tile path.
+        strategy / radix_bits / merge_run: the local-sort strategy for
+            the tile/candidate sorts, copied from the cfg (DESIGN.md
+            §8; the candidate packs preserve the payload invariant the
+            non-bitonic strategies rely on).
         impl / interpret / backend: resolved as in :class:`SortPlan`.
     """
 
@@ -416,6 +435,9 @@ class TopkPlan:
     impl: str
     interpret: bool
     backend: str
+    strategy: str = "bitonic"
+    radix_bits: int = 4
+    merge_run: int = 512
 
 
 @functools.lru_cache(maxsize=512)
@@ -449,6 +471,9 @@ def _assemble_topk_plan(
         impl=impl,
         interpret=interpret,
         backend=backend,
+        strategy=cfg.strategy,
+        radix_bits=cfg.radix_bits,
+        merge_run=cfg.merge_run,
     )
 
 
@@ -473,7 +498,11 @@ def build_topk_plan(
 # Serialization: byte-stable dict/JSON round-trip for the plan cache
 # ----------------------------------------------------------------------
 
-_SCHEMA = "sort_plan/v1"
+# v2: LevelPlan grew the per-level strategy fields (strategy /
+# radix_bits / merge_run).  Pre-strategy v1 records fail plan_from_dict
+# with a ValueError, which the autotune store treats as a clean cache
+# miss (re-tune and overwrite) — never a silently misread plan.
+_SCHEMA = "sort_plan/v2"
 
 
 def _node_to_dict(node: LevelPlan | None):

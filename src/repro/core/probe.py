@@ -1,0 +1,155 @@
+"""Cheap input-distribution probe for picking a local-sort strategy.
+
+The hybrid strategy dispatch (DESIGN.md §8) leaves a choice the planner
+cannot make from ``(shape, dtype, config)`` alone: which local-sort
+algorithm fits the DATA.  The GPU sorting survey (arXiv 1709.02520) and
+the parallel-sort comparison (arXiv 1511.03404) give the decision
+structure — merge paths win when the input already contains long sorted
+runs; radix ranking wins on narrow integer keys with enough digit
+entropy to spread buckets; otherwise the branch-free bitonic network is
+the robust default.  This module measures exactly those two signals on
+a small sample and picks the strategy WITHOUT running the autotuner:
+
+  * ``sortedness`` — fraction of adjacent element pairs already in
+    canonical order, measured over a few evenly-spaced CONTIGUOUS
+    chunks (contiguity matters: runs are a neighbourhood property, and
+    a scattered sample would destroy them);
+  * ``top_bits_entropy`` — Shannon entropy (bits, max 8) of the top
+    8 bits of the canonical most-significant key word; near-zero means
+    the leading radix passes would be no-ops over a constant digit
+    (all-dup / tiny-range inputs) while comparison sorts exit early.
+
+The probe needs CONCRETE values: it runs on the host, off the trace.
+Passing a tracer raises TypeError — a data-dependent strategy cannot be
+chosen inside ``jit`` without violating the static-plan discipline
+(DESIGN.md §7).  Intended use is ahead-of-time::
+
+    cfg = probe.probed_config(x_sample, SortConfig())
+    y = bucket_sort.sort(x, cfg)     # plan carries the probed strategy
+
+Thresholds (validated in tests/test_strategy.py and the
+``--suite strategies`` benchmark):
+
+  * sortedness >= 0.9          -> "merge"  (long runs dominate; the
+    nearly-sorted suite crosses ~0.98, random data sits near 0.5);
+  * one-word keys, n >= 2^19, entropy >= 2 bits -> "radix" (narrow
+    keys, enough digit spread, and n large enough that the rank
+    passes amortize);
+  * otherwise                  -> "bitonic".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.key_codec import codec_for
+from repro.core.sort_config import DEFAULT_CONFIG, SortConfig
+
+# Decision thresholds (module-level so tests/docs can reference them).
+SORTEDNESS_MERGE_THRESHOLD = 0.9
+ENTROPY_RADIX_THRESHOLD_BITS = 2.0
+RADIX_MIN_N = 1 << 19
+
+
+def _require_concrete(x) -> None:
+    if isinstance(x, jax.core.Tracer):
+        raise TypeError(
+            "probe() needs concrete values: a data-dependent strategy "
+            "cannot be picked inside jit (the plan must stay static, "
+            "DESIGN.md §7).  Probe a host-side sample ahead of time."
+        )
+
+
+def probe(x, *, sample_size: int = 4096, num_chunks: int = 16,
+          descending: bool = False) -> dict:
+    """Measure the two strategy signals on a small sample of ``x``.
+
+    Args:
+        x: 1-D array (any codec dtype) — concrete values only.
+        sample_size: total elements inspected (evenly-spaced contiguous
+            chunks; the whole array when it is small).
+        num_chunks: number of contiguous chunks the sample is split
+            into.
+        descending: measure sortedness in the descending canonical
+            order (matches ``SortConfig.descending``).
+    Returns:
+        dict with ``sortedness`` (float in [0, 1]), ``top_bits_entropy``
+        (float bits in [0, 8]), ``n`` and ``num_words``.
+    """
+    _require_concrete(x)
+    codec = codec_for(x.dtype, descending)
+    n = int(np.asarray(x.shape[0]))
+    if n == 0:
+        return dict(sortedness=1.0, top_bits_entropy=0.0, n=0,
+                    num_words=codec.num_words)
+    sample_size = min(sample_size, n)
+    chunk = max(sample_size // max(num_chunks, 1), 2)
+    xs = np.asarray(x)
+    chunks = []
+    for i in range(num_chunks):
+        start = (i * max(n - chunk, 0)) // max(num_chunks - 1, 1)
+        chunks.append(xs[start:start + chunk])
+        if start + chunk >= n:
+            break
+    import jax.numpy as jnp
+
+    in_order = 0
+    pairs = 0
+    top = []
+    for c in chunks:
+        if c.size == 0:
+            continue
+        msw = np.asarray(codec.encode(jnp.asarray(c))[0], dtype=np.uint64)
+        if msw.size >= 2:
+            in_order += int(np.sum(msw[:-1] <= msw[1:]))
+            pairs += msw.size - 1
+        top.append(msw >> 24)
+    sortedness = (in_order / pairs) if pairs else 1.0
+    hist = np.bincount(
+        np.concatenate(top).astype(np.int64), minlength=256
+    ).astype(np.float64)
+    p = hist / hist.sum()
+    nz = p[p > 0]
+    entropy = float(-(nz * np.log2(nz)).sum())
+    return dict(sortedness=float(sortedness), top_bits_entropy=entropy,
+                n=n, num_words=codec.num_words)
+
+
+def recommend_strategy(x, cfg: SortConfig = DEFAULT_CONFIG, *,
+                       sample_size: int = 4096) -> str:
+    """Pick the local-sort strategy for concrete data ``x`` (module
+    docstring has the decision rule and thresholds)."""
+    _require_concrete(x)
+    sig = probe(
+        x, sample_size=sample_size, descending=cfg.descending
+    )
+    if sig["sortedness"] >= SORTEDNESS_MERGE_THRESHOLD:
+        return "merge"
+    if (
+        sig["num_words"] == 1
+        and sig["n"] >= RADIX_MIN_N
+        and sig["top_bits_entropy"] >= ENTROPY_RADIX_THRESHOLD_BITS
+    ):
+        return "radix"
+    return "bitonic"
+
+
+def probed_config(x, cfg: SortConfig = DEFAULT_CONFIG, *,
+                  sample_size: int = 4096) -> SortConfig:
+    """``cfg`` with ``strategy`` replaced by the probe's pick — the
+    ``plan="default"`` path's data-aware entry (no autotuning run).
+
+    Example:
+        >>> import numpy as np
+        >>> from repro.core import probe
+        >>> from repro.core.sort_config import SortConfig
+        >>> x = np.arange(100_000, dtype=np.int32)
+        >>> probe.probed_config(x, SortConfig()).strategy
+        'merge'
+    """
+    return dataclasses.replace(
+        cfg, strategy=recommend_strategy(x, cfg, sample_size=sample_size)
+    )

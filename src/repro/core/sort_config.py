@@ -76,6 +76,23 @@ class SortConfig:
             runs the tuning search and records the winner);
           * any other string — a path to a plan file saved by
             ``autotune.save_plan``; its signature must match the call.
+    strategy: local-sort algorithm for the tile/direct sorts (DESIGN.md
+        §8).  "bitonic" (default) is the paper's branch-free network;
+        "radix" is an LSD radix rank-gather over the canonical uint32
+        key words (scatter-free, stable); "merge" forms sorted runs and
+        merges them pairwise with merge-path diagonal partitioning
+        (exploits pre-sorted input).  All three produce the identical
+        stable order (tested); the planner carries the choice per level
+        and ``core/autotune`` searches across strategies.  A cheap
+        data-distribution probe (``core/probe.py``) can pick this knob
+        from a concrete input sample without running the tuner.
+    radix_bits: digit width of the radix strategy, in {1, 2, 4} bits
+        (4 = 16 digits per pass, 8 passes per 32-bit key word).  Only
+        consulted when ``strategy == "radix"``.
+    merge_run: initial sorted-run length of the merge strategy, a power
+        of two >= 2 (runs are formed with the bitonic network, then
+        pairwise-merged up to the tile width).  Only consulted when
+        ``strategy == "merge"``.
     row_pad: batch-aware block_rows auto-pick (DESIGN.md §5).  The
         batched entry points (``sort_batched``, ``segment_sort``) pad
         the row count up to a multiple of this power of two before
@@ -99,6 +116,9 @@ class SortConfig:
     descending: bool = False
     row_pad: int = 8
     plan: str = "default"
+    strategy: str = "bitonic"
+    radix_bits: int = 4
+    merge_run: int = 512
 
     def __post_init__(self):
         # Field-by-field validation with errors that NAME the offending
@@ -141,6 +161,17 @@ class SortConfig:
                 f"got {self.relocation!r}"
             )
         _pow2("row_pad", self.row_pad, 1)
+        if self.strategy not in ("bitonic", "radix", "merge"):
+            raise ValueError(
+                'SortConfig.strategy must be "bitonic", "radix" or '
+                f'"merge", got {self.strategy!r}'
+            )
+        if self.radix_bits not in (1, 2, 4):
+            raise ValueError(
+                f"SortConfig.radix_bits must be 1, 2 or 4, got "
+                f"{self.radix_bits!r}"
+            )
+        _pow2("merge_run", self.merge_run, 2)
         if not (isinstance(self.plan, str) and self.plan):
             raise ValueError(
                 'SortConfig.plan must be "default", "autotune", or a '

@@ -247,14 +247,19 @@ def effective_block_rows(
     return largest_pow2_divisor(m, block_rows)
 
 
-def _bitonic_block_kernel(*refs, num_words: int, num_samples: int):
+def _block_kernel(*refs, num_words: int, num_samples: int, sort_rows):
     """Kernel body: refs = num_words+1 inputs (key words + vals),
-    num_words+1 outputs, and num_words+1 sample outputs iff sampling."""
+    num_words+1 outputs, and num_words+1 sample outputs iff sampling.
+    ``sort_rows`` is the row-sort network applied to the VMEM block —
+    the bitonic network by default; the radix-rank and merge-path
+    strategies (kernels/radix.py, kernels/merge.py) plug theirs in
+    (DESIGN.md §8)."""
     nw1 = num_words + 1
     in_refs, out_refs = refs[:nw1], refs[nw1:2 * nw1]
     words = tuple(r[...] for r in in_refs[:num_words])  # (block_rows, T) each
     vals = in_refs[num_words][...]
-    words, vals = bitonic_network_rows(words, vals)
+    words, vals = sort_rows(words, vals)
+    words = as_words(words)
     for r, w in zip(out_refs, words + (vals,)):
         r[...] = w
     if num_samples:
@@ -267,8 +272,14 @@ def _bitonic_block_kernel(*refs, num_words: int, num_samples: int):
             r[...] = w.reshape(b, num_samples, chunk)[:, :, -1]
 
 
-def _sort_tiles_call(words, vals, num_samples: int, block_rows,
-                     interpret: bool):
+def tile_sort_call(words, vals, num_samples: int, block_rows,
+                   interpret: bool, sort_rows=None):
+    """Shared row-blocked pallas launch for every local-sort strategy:
+    grid over (block_rows, T) blocks, optional fused sample epilogue.
+    ``sort_rows(words_tuple, vals) -> (words, vals)`` sorts each row of
+    the block; None selects the bitonic network."""
+    if sort_rows is None:
+        sort_rows = bitonic_network_rows
     nw = len(words)
     m, t = words[0].shape
     assert vals.shape == (m, t)
@@ -292,7 +303,8 @@ def _sort_tiles_call(words, vals, num_samples: int, block_rows,
         out_shape += [jax.ShapeDtypeStruct((m, num_samples), jnp.int32)]
     return pl.pallas_call(
         functools.partial(
-            _bitonic_block_kernel, num_words=nw, num_samples=num_samples
+            _block_kernel, num_words=nw, num_samples=num_samples,
+            sort_rows=sort_rows,
         ),
         grid=grid,
         in_specs=in_specs,
@@ -328,7 +340,7 @@ def sort_tiles_kv(
         ascending in the lexicographic (*words, payload) order.
     """
     words = as_words(keys)
-    out = _sort_tiles_call(words, vals, 0, block_rows, interpret)
+    out = tile_sort_call(words, vals, 0, block_rows, interpret)
     return like_words(tuple(out[:-1]), keys), out[-1]
 
 
@@ -357,7 +369,7 @@ def sort_tiles_sample_kv(
     """
     words = as_words(keys)
     nw = len(words)
-    out = _sort_tiles_call(words, vals, num_samples, block_rows, interpret)
+    out = tile_sort_call(words, vals, num_samples, block_rows, interpret)
     return (
         like_words(tuple(out[:nw]), keys),
         out[nw],

@@ -1,0 +1,245 @@
+"""Hybrid local-sort strategy dispatch (ISSUE 6 / DESIGN.md §8).
+
+Covers:
+  * conformance: strategy (bitonic/radix/merge) x dtype (int32 / uint32
+    / int64 / float32) x impl (xla, interpreted Pallas) against the
+    numpy stable oracles — values AND permutations;
+  * hypothesis properties: the radix and merge pipelines are
+    permutation- and stability-EQUAL to the bitonic pipeline (same
+    plan geometry, only ``strategy`` differs);
+  * planner: candidate 0 of the autotune space is still the base
+    config; the fingerprint extends over the new fields; a stale
+    pre-strategy ``sort_plan/v1`` cache record triggers a clean
+    re-tune instead of a misread;
+  * zero new retraces: equal strategy plans share one executable;
+  * ``SortConfig.__post_init__`` names the offending field;
+  * the distribution probe's recommendations and its tracer rejection.
+"""
+
+import contextlib
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune as autotune_mod
+from repro.core import bucket_sort, probe
+from repro.core.autotune import cache_key
+from repro.core.plan import build_plan, config_fingerprint, plan_to_dict
+from repro.core.sort_config import DEFAULT_CONFIG, SortConfig
+
+STRATEGIES = ("bitonic", "radix", "merge")
+
+_XLA = SortConfig(tile=256, s=16, direct_max=512, impl="xla")
+_PAL = SortConfig(tile=128, s=8, direct_max=256, impl="pallas", interpret=True)
+
+CELLS = [pytest.param(_XLA, id="xla"), pytest.param(_PAL, id="pallas-interpret")]
+
+DTYPES = ["int32", "uint32", "int64", "float32"]
+
+
+def dtype_ctx(dtype):
+    if dtype == "int64":
+        return jax.experimental.enable_x64()
+    return contextlib.nullcontext()
+
+
+def make_keys(dtype, n, rng):
+    if dtype == "int32":
+        return rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32)
+    if dtype == "uint32":
+        return rng.integers(0, 2**32, n, dtype=np.uint64).astype(np.uint32)
+    if dtype == "int64":
+        return rng.integers(-(2**63), 2**63 - 1, n, dtype=np.int64)
+    if dtype == "float32":
+        x = rng.normal(0, 1e9, n).astype(np.float32)
+        x[rng.integers(0, n, max(n // 64, 1))] = np.inf
+        x[rng.integers(0, n, max(n // 64, 1))] = -np.inf
+        return x
+    raise KeyError(dtype)
+
+
+# ----------------------------------------------------------------------
+# Conformance: strategy x dtype x impl
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg0", CELLS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_strategy_conformance(cfg0, dtype, strategy, rng):
+    cfg = dataclasses.replace(cfg0, strategy=strategy)
+    # The small size stays on the direct path; the large one crosses the
+    # cell's direct_max into a bucket round — both paths run every
+    # strategy.  Interpret-mode Pallas runs the radix/merge inner loops
+    # in pure Python, so that cell uses smaller sizes to stay fast.
+    sizes = (127, 1500) if cfg.impl == "xla" else (63, 300)
+    for n in sizes:
+        with dtype_ctx(dtype):
+            x = make_keys(dtype, n, rng)
+            out = np.asarray(bucket_sort.sort(jnp.asarray(x), cfg))
+            np.testing.assert_array_equal(out, np.sort(x))
+            perm = np.asarray(bucket_sort.argsort(jnp.asarray(x), cfg))
+            np.testing.assert_array_equal(perm, np.argsort(x, kind="stable"))
+
+
+@pytest.mark.parametrize("strategy", ["radix", "merge"])
+def test_strategy_kv_and_batched(strategy, rng):
+    cfg = dataclasses.replace(_XLA, strategy=strategy)
+    x = rng.integers(0, 50, 1500).astype(np.int32)  # heavy duplicates
+    v = np.arange(1500, dtype=np.int32)
+    k2, v2 = bucket_sort.sort_kv(jnp.asarray(x), jnp.asarray(v), cfg)
+    perm = np.argsort(x, kind="stable")
+    np.testing.assert_array_equal(np.asarray(k2), x[perm])
+    np.testing.assert_array_equal(np.asarray(v2), perm)
+    xb = rng.integers(-1000, 1000, (5, 700)).astype(np.int32)
+    outb = np.asarray(bucket_sort.sort_batched(jnp.asarray(xb), cfg))
+    np.testing.assert_array_equal(outb, np.sort(xb, axis=-1))
+
+
+# ----------------------------------------------------------------------
+# Property: radix/merge pipelines equal the bitonic pipeline
+# ----------------------------------------------------------------------
+
+def _assert_pipelines_equal(xs):
+    """With heavy duplicates, the three strategies must emit the SAME
+    permutation (stability ties broken identically), not merely the
+    same sorted values."""
+    x = jnp.asarray(np.asarray(xs, np.int32))
+    ref = np.asarray(
+        bucket_sort.argsort(x, dataclasses.replace(_XLA, strategy="bitonic"))
+    )
+    np.testing.assert_array_equal(ref, np.argsort(np.asarray(x), kind="stable"))
+    for strategy in ("radix", "merge"):
+        got = np.asarray(
+            bucket_sort.argsort(x, dataclasses.replace(_XLA, strategy=strategy))
+        )
+        np.testing.assert_array_equal(got, ref)
+
+
+try:  # optional dev dep (pip install -e '.[test]')
+    from hypothesis import given, settings, strategies as st
+
+    small_ints = st.lists(
+        st.integers(min_value=0, max_value=7), min_size=1, max_size=2000
+    )
+
+    @settings(max_examples=20, deadline=None)
+    @given(small_ints)
+    def test_strategy_pipelines_permutation_and_stability_equal(xs):
+        _assert_pipelines_equal(xs)
+
+except ModuleNotFoundError:  # seeded fallback keeps the invariant tested
+    @pytest.mark.parametrize("seed", range(6))
+    def test_strategy_pipelines_permutation_and_stability_equal(seed):
+        r = np.random.default_rng(seed)
+        n = int(r.integers(1, 2000))
+        _assert_pipelines_equal(r.integers(0, 8, n).astype(np.int32))
+
+
+# ----------------------------------------------------------------------
+# Planner integration
+# ----------------------------------------------------------------------
+
+
+def test_strategy_candidate_space_keeps_base_first():
+    cands = autotune_mod.candidate_space(_XLA, 100_000, max_trials=16)
+    assert cands[0].cfg == _XLA and cands[0].label == "base"
+    seen = {c.cfg.strategy for c in cands}
+    assert seen == set(STRATEGIES), f"strategy axis missing: {seen}"
+
+
+def test_strategy_extends_config_fingerprint():
+    a = config_fingerprint(_XLA)
+    assert config_fingerprint(dataclasses.replace(_XLA, strategy="radix")) != a
+    assert config_fingerprint(dataclasses.replace(_XLA, radix_bits=2)) != a
+    assert config_fingerprint(dataclasses.replace(_XLA, merge_run=128)) != a
+    # plan= stays excluded (it selects a plan, it does not shape one)
+    assert config_fingerprint(dataclasses.replace(_XLA, plan="autotune")) == a
+
+
+def test_strategy_stale_v1_cache_record_retunes_cleanly(tmp_path):
+    """A pre-strategy ``sort_plan/v1`` record in the plan store must be
+    treated as a miss: plan_for re-tunes and overwrites, no crash."""
+    cfg = dataclasses.replace(_XLA, plan="autotune")
+    base = build_plan(2333, "int32", cfg)
+    stale = plan_to_dict(base)
+    stale["schema"] = "sort_plan/v1"
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps({
+        "schema": "sort_plan_cache/v1",
+        "plans": {cache_key(base): {"plan": stale, "best_us": 1.0}},
+    }))
+    autotune_mod.clear_memo()
+    plan = autotune_mod.plan_for(
+        2333, "int32", cfg, path=str(path), max_trials=3, repeats=1
+    )
+    assert plan.root.strategy in STRATEGIES
+    fresh = json.loads(path.read_text())["plans"][cache_key(base)]
+    assert fresh["plan"]["schema"] == "sort_plan/v2"
+
+
+@pytest.mark.parametrize("strategy", ["radix", "merge"])
+def test_strategy_same_signature_traces_once(strategy, rng):
+    cfg = dataclasses.replace(_XLA, strategy=strategy)
+    x = jnp.asarray(rng.integers(0, 10_000, 2048).astype(np.int32))
+    bucket_sort.sort(x, cfg)  # may compile
+    t0 = bucket_sort.trace_count()
+    bucket_sort.sort(x, cfg)
+    assert bucket_sort.trace_count() == t0, f"{strategy} plan retraced"
+
+
+# ----------------------------------------------------------------------
+# Config validation
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw, field", [
+    (dict(strategy="quantum"), "strategy"),
+    (dict(radix_bits=3), "radix_bits"),
+    (dict(radix_bits=8), "radix_bits"),
+    (dict(merge_run=100), "merge_run"),
+])
+def test_strategy_config_validation_names_field(kw, field):
+    with pytest.raises(ValueError, match=field):
+        dataclasses.replace(DEFAULT_CONFIG, **kw)
+
+
+# ----------------------------------------------------------------------
+# Distribution probe
+# ----------------------------------------------------------------------
+
+
+def test_strategy_probe_recommends_merge_on_sorted(rng):
+    x = np.sort(rng.integers(-(2**31), 2**31 - 1, 1 << 20).astype(np.int32))
+    stats = probe.probe(x)
+    assert stats["sortedness"] >= probe.SORTEDNESS_MERGE_THRESHOLD
+    assert probe.recommend_strategy(x) == "merge"
+    assert probe.probed_config(x).strategy == "merge"
+
+
+def test_strategy_probe_recommends_radix_on_large_uniform(rng):
+    x = rng.integers(-(2**31), 2**31 - 1, 1 << 20).astype(np.int32)
+    assert probe.recommend_strategy(x) == "radix"
+
+
+def test_strategy_probe_falls_back_to_bitonic(rng):
+    dup = np.full(1 << 20, 42, np.int32)  # zero entropy, unsorted? sorted!
+    # all-equal IS sorted -> merge; use a low-entropy unsorted input:
+    x = rng.choice(np.array([3, 7], np.int32), 1 << 20)
+    assert probe.recommend_strategy(x) == "bitonic"
+    small = rng.integers(-(2**31), 2**31 - 1, 1024).astype(np.int32)
+    assert probe.recommend_strategy(small) == "bitonic"  # below RADIX_MIN_N
+    assert probe.recommend_strategy(dup) == "merge"  # sorted beats entropy
+
+
+def test_strategy_probe_rejects_tracers():
+    @jax.jit
+    def bad(x):
+        return probe.recommend_strategy(x)
+
+    with pytest.raises(TypeError, match="concrete"):
+        bad(jnp.arange(100, dtype=jnp.int32))
