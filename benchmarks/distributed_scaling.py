@@ -1,0 +1,106 @@
+"""--suite distributed: host-mesh strong scaling of the sharded sort.
+
+Each D in {1, 2, 4, 8} runs in its OWN subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=D`` (the flag must
+be set before jax import, and the parent bench process must keep its
+real 1-device topology).  D=1 is the single-device ``sort_kv``
+baseline at the same n_global; D>=2 builds a ``("data",)`` host mesh
+and times the plan-aware ``make_sharded_sort`` runner end to end.
+
+Host "devices" here share one CPU, so this measures the *overhead*
+curve of the deal-round schedule (padding, s_loc sample, fixed-shape
+all_to_all at c_pair, out_cap compaction) rather than real speedup —
+the derived column records Mkeys/s and the efficiency vs the D=1
+baseline so successive PRs can track schedule cost at fixed n_global.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_SELF = os.path.abspath(__file__)
+_ROOT = os.path.dirname(os.path.dirname(_SELF))
+
+DS = (1, 2, 4, 8)
+
+
+def _child(d: int, n_global: int, repeats: int) -> None:
+    # Runs under --xla_force_host_platform_device_count=d (set by run()).
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import timeit
+    from repro.core.sort_config import SortConfig
+
+    cfg = SortConfig(tile=4096, s=64, direct_max=8192, impl="xla")
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, n_global).astype(np.int32))
+    out: dict = dict(d=d, n_global=n_global)
+    if d == 1:
+        from repro.core import bucket_sort
+
+        t = timeit(lambda a: bucket_sort.sort_kv(
+            a, jnp.arange(n_global, dtype=jnp.int32), cfg), x,
+            repeats=repeats)
+        out["schedule"] = "single-device sort_kv baseline"
+    else:
+        from repro.core.distributed_sort import make_sharded_sort
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((d,), ("data",))
+        run_fn, plan = make_sharded_sort(mesh, "data", n_global, cfg)
+        t = timeit(run_fn, x, repeats=repeats)
+        out["schedule"] = (
+            f"oversample={plan.oversample} c_pair={plan.c_pair} "
+            f"out_cap={plan.out_cap} local={plan.run_plan.root.strategy}"
+        )
+    out["us_per_call"] = t * 1e6
+    print("RESULT " + json.dumps(out), flush=True)
+
+
+def run(n_global: int = 262144, repeats: int = 3, ds=DS):
+    rows = []
+    base_us = None
+    for d in ds:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={d}"
+        ).strip()
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (_ROOT, os.path.join(_ROOT, "src"),
+                        env.get("PYTHONPATH", "")) if p)
+        proc = subprocess.run(
+            [sys.executable, _SELF, "--child", str(d), str(n_global),
+             str(repeats)],
+            env=env, capture_output=True, text=True, timeout=900)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"distributed bench child d={d} failed:\n{proc.stderr[-2000:]}")
+        line = next(l for l in proc.stdout.splitlines()
+                    if l.startswith("RESULT "))
+        res = json.loads(line[len("RESULT "):])
+        us = res["us_per_call"]
+        if d == 1:
+            base_us = us
+        eff = (base_us / us) if base_us else float("nan")
+        rows.append(dict(
+            name=f"distributed/d{d}",
+            us_per_call=us,
+            derived=(
+                f"n_global={n_global} rate={n_global / us:.2f}Mkeys/s "
+                f"vs_d1={eff:.2f}x host-mesh {res['schedule']}"
+            ),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    if len(sys.argv) == 5 and sys.argv[1] == "--child":
+        _child(int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]))
+    else:
+        for row in run():
+            print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")

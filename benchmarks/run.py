@@ -45,6 +45,7 @@ def main() -> None:
     from benchmarks import (
         autotune_bench,
         batched_segmented,
+        distributed_scaling,
         distribution_robustness,
         dtypes_throughput,
         moe_dispatch,
@@ -81,6 +82,9 @@ def main() -> None:
             max_trials=6 if quick else 12),
         "strategies": lambda: strategies.run(
             n=262144 if quick else 1048576),
+        "distributed": lambda: distributed_scaling.run(
+            n_global=65536 if quick else 262144,
+            repeats=2 if quick else 3),
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

@@ -7,7 +7,15 @@
 # NOTE: the tuning and probing entries themselves stay namespaced
 # (repro.core.autotune.autotune, repro.core.probe.probe) — binding the
 # function name here would shadow the submodule.
-from repro.core.autotune import AutotuneResult, load_plan, plan_for, save_plan
+from repro.core.autotune import (
+    AutotuneResult,
+    load_plan,
+    load_shard_plan,
+    plan_for,
+    save_plan,
+    save_shard_plan,
+    shard_plan_for,
+)
 from repro.core.bucket_sort import (
     argsort,
     argsort_batched,
@@ -28,13 +36,18 @@ from repro.core.partial_sort import topk, topk_batched
 from repro.core.probe import probed_config, recommend_strategy
 from repro.core.plan import (
     LevelPlan,
+    ShardPlan,
     SortPlan,
     TopkPlan,
     build_plan,
+    build_shard_plan,
     build_topk_plan,
     build_words_plan,
     plan_from_dict,
     plan_to_dict,
+    shard_geometry,
+    shard_plan_from_dict,
+    shard_plan_to_dict,
 )
 from repro.core.sort_config import DEFAULT_CONFIG, PAPER_CONFIG, SortConfig
 
@@ -73,6 +86,14 @@ __all__ = [
     "plan_for",
     "load_plan",
     "save_plan",
+    "ShardPlan",
+    "build_shard_plan",
+    "shard_geometry",
+    "shard_plan_from_dict",
+    "shard_plan_to_dict",
+    "shard_plan_for",
+    "load_shard_plan",
+    "save_shard_plan",
     "DistSortSpec",
     "make_sharded_sort",
     "sorted_shard",

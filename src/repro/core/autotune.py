@@ -36,10 +36,14 @@ import jax
 import numpy as np
 
 from repro.core.plan import (
+    ShardPlan,
     SortPlan,
     build_plan,
+    build_shard_plan,
     plan_from_dict,
     plan_to_dict,
+    shard_plan_from_dict,
+    shard_plan_to_dict,
 )
 from repro.core.sort_config import SortConfig, next_pow2
 
@@ -282,6 +286,27 @@ def _measure(fn, x, *, repeats: int, warmup: int = 1) -> float:
     return float(np.median(ts)) * 1e6
 
 
+def _sample_input(length: int, dtype, rows: int, seed: int):
+    """Deterministic representative data for measurement (seeded uniform
+    keys of the target dtype), shared by the single-device and
+    distributed tuners."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    npdt = np.dtype(jnp.dtype(dtype).name)
+    shape = (length,) if rows == 1 else (rows, length)
+    if npdt.kind == "f":
+        x = rng.standard_normal(shape).astype(npdt)
+    elif npdt.kind == "b":
+        x = rng.integers(0, 2, shape).astype(npdt)
+    elif npdt.kind == "u":
+        x = rng.integers(0, np.iinfo(npdt).max, shape, dtype=np.uint64).astype(npdt)
+    else:
+        info = np.iinfo(npdt)
+        x = rng.integers(info.min, info.max, shape, dtype=np.int64).astype(npdt)
+    return jnp.asarray(x)
+
+
 def autotune(
     length: int,
     dtype,
@@ -299,23 +324,9 @@ def autotune(
     Data is deterministic (seeded uniform keys of the target dtype), so
     back-to-back runs rank candidates consistently up to timer noise.
     """
-    import jax.numpy as jnp
-
     from repro.core import bucket_sort
 
-    rng = np.random.default_rng(seed)
-    npdt = np.dtype(jnp.dtype(dtype).name)
-    shape = (length,) if rows == 1 else (rows, length)
-    if npdt.kind == "f":
-        x = rng.standard_normal(shape).astype(npdt)
-    elif npdt.kind == "b":
-        x = rng.integers(0, 2, shape).astype(npdt)
-    elif npdt.kind == "u":
-        x = rng.integers(0, np.iinfo(npdt).max, shape, dtype=np.uint64).astype(npdt)
-    else:
-        info = np.iinfo(npdt)
-        x = rng.integers(info.min, info.max, shape, dtype=np.int64).astype(npdt)
-    xj = jnp.asarray(x)
+    xj = _sample_input(length, dtype, rows, seed)
 
     trials: list[TrialResult] = []
     best_plan, best_label = None, ""
@@ -404,8 +415,276 @@ def plan_for(
     return result.best_plan
 
 
+# ----------------------------------------------------------------------
+# Distributed candidate axis: oversample x local strategy x exchange
+# tiling, persisted in the same JSON store keyed by mesh signature
+# ----------------------------------------------------------------------
+
+# Process-local memo for tuned shard plans (same role as _MEMO).
+_SHARD_MEMO: dict[str, ShardPlan] = {}
+
+
+def shard_cache_key(plan: ShardPlan) -> str:
+    """The persistent-cache key of a distributed plan: the ``shard|``
+    namespace plus every component of :meth:`ShardPlan.signature` —
+    mesh signature (axis names + D), shard shape, dtype+order, the
+    requested oversample/pair_align, the resolved backend triple, and
+    the requesting config's fingerprint.  Lives in the same JSON store
+    as the single-device keys (disjoint namespaces)."""
+    return "shard|" + "|".join(str(x) for x in plan.signature())
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCandidate:
+    """One point of the distributed search space."""
+
+    cfg: SortConfig
+    oversample: int
+    pair_align: int
+    label: str
+
+
+def shard_candidate_space(
+    cfg: SortConfig,
+    *,
+    oversample: int = 8,
+    pair_align: int = 8,
+    max_trials: int = 8,
+) -> list[ShardCandidate]:
+    """Deterministic, ordered distributed candidate list.
+
+    The BASE (requested cfg/oversample/pair_align) is candidate 0, so
+    the measured winner is never slower than the default schedule.  The
+    axes, nearest first: the per-phase local-sort strategy (highest
+    variance, DESIGN.md §8), the oversample factor c (trades sample
+    volume against the 1/c slack in ``c_pair``), and the exchange
+    tiling ``pair_align`` (lane alignment of the per-pair all_to_all
+    capacity).
+    """
+    seen: set[tuple] = set()
+    out: list[ShardCandidate] = []
+
+    def _add(label: str, *, strategy=None, osamp=None, palign=None):
+        if len(out) >= max_trials:
+            return
+        o = oversample if osamp is None else osamp
+        pa = pair_align if palign is None else palign
+        if o < 1 or o & (o - 1) or pa < 8 or pa & (pa - 1):
+            return
+        try:
+            cand_cfg = dataclasses.replace(
+                cfg, plan="default",
+                **({"strategy": strategy} if strategy else {}),
+            )
+        except ValueError:
+            return
+        key = (cand_cfg, o, pa)
+        if key in seen:
+            return
+        seen.add(key)
+        out.append(ShardCandidate(
+            cfg=cand_cfg, oversample=o, pair_align=pa, label=label
+        ))
+
+    _add("base")
+    for st in ("bitonic", "radix", "merge"):
+        if st != cfg.strategy:
+            _add(f"strategy={st}", strategy=st)
+    for o in (oversample * 2, max(oversample // 2, 1), oversample * 4):
+        _add(f"oversample={o}", osamp=o)
+    for pa in (128, 256):
+        _add(f"pair_align={pa}", palign=pa)
+    return out
+
+
+def autotune_shard(
+    mesh,
+    axis,
+    n_global: int,
+    dtype,
+    cfg: SortConfig,
+    *,
+    oversample: int = 8,
+    pair_align: int = 8,
+    max_trials: int = 8,
+    repeats: int = 2,
+    seed: int = 0,
+) -> AutotuneResult:
+    """Measured search over the distributed schedule space: build each
+    candidate's :class:`ShardPlan`, time the real jit'd distributed
+    executor on representative data over ``mesh``, return the winner.
+
+    Needs a mesh whose ``axis`` spans >= 2 devices (forced-host meshes
+    in tests/benchmarks); data is deterministic so back-to-back runs
+    rank candidates consistently up to timer noise.
+    """
+    from repro.core import distributed_sort
+
+    axt = (axis,) if isinstance(axis, str) else tuple(axis)
+    d = 1
+    for a in axt:
+        d *= mesh.shape[a]
+    xj = _sample_input(n_global, dtype, 1, seed)
+
+    trials: list[TrialResult] = []
+    best_plan, best_label = None, ""
+    best_us, default_us = float("inf"), float("inf")
+    space = shard_candidate_space(
+        cfg, oversample=oversample, pair_align=pair_align,
+        max_trials=max_trials,
+    )
+    for i, cand in enumerate(space):
+        plan = build_shard_plan(
+            axt, d, n_global // d, dtype, cand.cfg,
+            oversample=cand.oversample, pair_align=cand.pair_align,
+        )
+        try:
+            us = _measure(
+                lambda a, p=plan: distributed_sort._sharded_argsort(
+                    a, mesh, p
+                ),
+                xj, repeats=repeats,
+            )
+        except Exception:  # a candidate may be unrunnable on this backend
+            continue
+        trials.append(TrialResult(label=cand.label, us_per_call=us))
+        if i == 0:
+            default_us = us
+        if us < best_us:
+            best_plan, best_label, best_us = plan, cand.label, us
+    assert best_plan is not None, "no distributed autotune candidate ran"
+    return AutotuneResult(
+        best_plan=best_plan,
+        best_label=best_label,
+        best_us=best_us,
+        default_us=default_us,
+        trials=tuple(trials),
+    )
+
+
+def shard_plan_for(
+    mesh,
+    axis,
+    n_global: int,
+    dtype,
+    cfg: SortConfig,
+    *,
+    oversample: int = 8,
+    pair_align: int = 8,
+    path: str | None = None,
+    max_trials: int = 8,
+    repeats: int = 2,
+) -> ShardPlan:
+    """Cached-or-tuned distributed plan (the ``plan="autotune"`` path of
+    ``make_sharded_sort``).
+
+    Lookup order mirrors :func:`plan_for`: process memo -> on-disk
+    store (keyed by :func:`shard_cache_key`, i.e. by mesh signature) ->
+    run :func:`autotune_shard` and persist the winner.  A reloaded plan
+    is EQUAL to the saved one, so the distributed jit entry's static-arg
+    cache hits too — a shard-plan-cache hit performs zero retraces
+    (tested on forced-host meshes).
+    """
+    axt = (axis,) if isinstance(axis, str) else tuple(axis)
+    d = 1
+    for a in axt:
+        d *= mesh.shape[a]
+    base = build_shard_plan(
+        axt, d, n_global // d, dtype, cfg,
+        oversample=oversample, pair_align=pair_align,
+    )
+    key = shard_cache_key(base)
+    if key in _SHARD_MEMO:
+        return _SHARD_MEMO[key]
+    path = path or cache_path()
+    store = _load_store(path)
+    rec = store["plans"].get(key)
+    if rec is not None:
+        try:
+            plan = shard_plan_from_dict(rec["plan"])
+        except (ValueError, TypeError):
+            rec = None  # stale schema: clean miss, re-tune and overwrite
+        else:
+            _SHARD_MEMO[key] = plan
+            return plan
+    result = autotune_shard(
+        mesh, axt, n_global, dtype, cfg,
+        oversample=oversample, pair_align=pair_align,
+        max_trials=max_trials, repeats=repeats,
+    )
+    store["plans"][key] = dict(
+        plan=shard_plan_to_dict(result.best_plan),
+        best_us=round(result.best_us, 1),
+        default_us=round(result.default_us, 1),
+        speedup=round(result.speedup, 3),
+    )
+    _save_store(path, store)
+    _SHARD_MEMO[key] = result.best_plan
+    return result.best_plan
+
+
+def save_shard_plan(
+    plan: ShardPlan, path: str, *, meta: dict | None = None
+) -> None:
+    """Write one distributed plan to ``path`` as a standalone file (the
+    format ``SortConfig(plan=<path>)`` reads through
+    ``make_sharded_sort`` and :func:`load_shard_plan`)."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    payload = shard_plan_to_dict(plan)
+    if meta:
+        payload["meta"] = meta
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def load_shard_plan(
+    path: str,
+    *,
+    axis=None,
+    d: int | None = None,
+    n_local: int | None = None,
+    dtype=None,
+    cfg: SortConfig | None = None,
+) -> ShardPlan:
+    """Read a distributed plan file saved by :func:`save_shard_plan`.
+
+    When a call signature is supplied (as ``make_sharded_sort`` does
+    for ``SortConfig(plan=<path>)``), the file's plan must match it —
+    mesh axis/D, shard length, dtype and order are load-bearing
+    (ValueError otherwise).
+    """
+    import jax.numpy as jnp
+
+    fkey = (path, os.stat(path).st_mtime_ns)
+    plan = _FILE_MEMO.get(fkey)
+    if not isinstance(plan, ShardPlan):
+        with open(path) as f:
+            rec = json.load(f)
+        rec.pop("meta", None)
+        plan = shard_plan_from_dict(rec)
+        _FILE_MEMO[fkey] = plan
+    if d is not None:
+        axt = (axis,) if isinstance(axis, str) else tuple(axis)
+        want = (axt, d, n_local, jnp.dtype(dtype).name,
+                cfg.descending if cfg else plan.descending)
+        got = (plan.axis, plan.d, plan.n_local, plan.dtype_name,
+               plan.descending)
+        if want != got:
+            raise ValueError(
+                f"shard plan file {path} was built for (axis, d, n_local, "
+                f"dtype, descending)={got}, call needs {want}"
+            )
+    return plan
+
+
 def clear_memo() -> None:
     """Drop the process-local memos (tests use this to force the disk
     path)."""
     _MEMO.clear()
+    _SHARD_MEMO.clear()
     _FILE_MEMO.clear()

@@ -5,7 +5,7 @@ It is the cluster-level analogue of the paper's bucket phase, with one
 extra "deal" round that restores the *guaranteed-capacity* property at
 per-device-pair granularity — the property that makes the exchange a
 single STATIC ``lax.all_to_all`` (XLA requires static shapes; a
-randomized splitter choice admits no such bound — DESIGN.md §2).
+randomized splitter choice admits no such bound — DESIGN.md §2, §9).
 
 Per-shard pipeline (axis size D, local length n_loc, oversample c):
 
@@ -31,6 +31,19 @@ The result is returned padded-ragged: (out_cap,) keys/payloads per
 shard plus a valid-count — the natural output of a sample sort (global
 order = concatenation of valid prefixes in device order).
 
+PLAN-AWARE (DESIGN.md §9): the ENTIRE distributed schedule — mesh axis
+and D, n_pad, oversample, deal geometry, the c_pair/out_cap
+capacities, and the four per-phase local-sort :class:`SortPlan`s — is
+a frozen :class:`repro.core.plan.ShardPlan` computed once by
+``build_shard_plan`` (or tuned by ``autotune.shard_plan_for``).
+:func:`sorted_shard` is a pure executor that derives nothing, and the
+jit'd entry takes ``(mesh, plan)`` as STATIC arguments: equal
+``(shape, mesh, dtype, plan)`` signatures share one compiled
+executable (``trace_count`` exposes the counter; tests assert
+trace-once / zero-retrace discipline exactly as the single-device path
+does).  The per-phase plans inherit the strategy dispatch (DESIGN.md
+§8), so shards can radix- or merge-sort their local runs.
+
 Keys dispatch on the ``core/key_codec`` codecs like the single-device
 pipeline: ``make_sharded_sort`` accepts any codec dtype (64-bit keys
 travel as two uint32 words per element through every collective; x64
@@ -42,6 +55,7 @@ arrays, returned in the same structure.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -50,70 +64,95 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.bucket_sort import _run_node
 from repro.core.key_codec import codec_for
-from repro.core.plan import build_words_plan
-from repro.core.sort_config import DEFAULT_CONFIG, SortConfig, round_up
+from repro.core.plan import ShardPlan, SortPlan, build_shard_plan, shard_geometry
+from repro.core.sort_config import DEFAULT_CONFIG, SortConfig
 from repro.kernels import ops
 from repro.kernels.bitonic import as_words, like_words
 
 _MAXU = jnp.uint32(0xFFFFFFFF)
+
+# Python-side retrace counter for the jit'd distributed entry
+# (increments once per TRACE, not per call) — the distributed analogue
+# of ``bucket_sort.trace_count``; tests assert same-(mesh, n, dtype,
+# plan) => one trace and plan-cache hit => zero retraces with it.
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    """Number of times the distributed entry has been TRACED in this
+    process (a retrace/compile-discipline counter for tests)."""
+    return _TRACE_COUNT
 
 
 @dataclasses.dataclass(frozen=True)
 class DistSortSpec:
     """Static geometry of a distributed sort (all trace-time ints).
 
+    Retained as the minimal arithmetic view of the schedule (the
+    hypothesis property tests exercise it directly); every derived
+    quantity delegates to :func:`repro.core.plan.shard_geometry`, the
+    single source of truth the :class:`~repro.core.plan.ShardPlan`
+    builder also reads.
+
     Attributes:
         axis: mesh axis name (or tuple of names) the sort spans.
         d: devices along the sort axis.
         n_local: local shard length (pre-padding).
         oversample: regular-sampling oversample factor c (bound above).
+        pair_align: lane alignment of the per-pair exchange capacity.
     """
 
     axis: str | tuple[str, ...]
     d: int  # devices along the sort axis
     n_local: int  # local shard length (pre-padding)
     oversample: int = 8
+    pair_align: int = 8
 
     @property
     def axis_tuple(self):
         return (self.axis,) if isinstance(self.axis, str) else tuple(self.axis)
 
     @property
+    def _geometry(self):
+        return shard_geometry(
+            self.n_local, self.d, self.oversample, self.pair_align
+        )
+
+    @property
     def s_loc(self) -> int:
-        return self.oversample * self.d
+        return self._geometry.s_loc
 
     @property
     def n_pad(self) -> int:
         # Padded so the deal (multiple of d) and the equidistant sampling
         # (multiple of s_loc = oversample*d) are both exact — exact spacing
         # is what the capacity-bound proof relies on.
-        return round_up(self.n_local, self.s_loc)
+        return self._geometry.n_pad
 
     @property
     def b_t(self) -> int:
         """Max global bucket size: B_t <= n_pad * (1 + 1/oversample)."""
-        return self.n_pad + self.n_pad // self.oversample
+        return self._geometry.b_t
 
     @property
     def c_pair(self) -> int:
         """Static per-pair all_to_all capacity: B_t/D + D (deal bound)."""
-        return round_up(-(-self.b_t // self.d) + self.d, 8)
+        return self._geometry.c_pair
 
     @property
     def out_cap(self) -> int:
         """Static per-shard output capacity >= any bucket total B_t."""
-        return min(round_up(self.b_t, 8), self.d * self.c_pair)
+        return self._geometry.out_cap
 
 
-def _local_sort(kw, v, cfg, pad_base):
-    """Plan-driven local sort: every per-shard sort builds its static
-    schedule through the same ``core/plan`` builder as the single-device
-    pipeline (all shard lengths are trace-time ints) and hands it to the
-    plan executor."""
-    p = build_words_plan(kw[0].shape[0], len(kw), cfg)
+def _local_sort(kw, v, sub: SortPlan, pad_base):
+    """Pure plan-driven local sort: hand one per-phase ``SortPlan`` off
+    the :class:`ShardPlan` to the plan executor — nothing is derived
+    here (shapes must match the sub-plan exactly; ``_run_node``
+    asserts it)."""
     skw, sv, _ = _run_node(
-        tuple(w[None, :] for w in kw), v[None, :], p.root, p.impl,
-        p.interpret, pad_base, None,
+        tuple(w[None, :] for w in kw), v[None, :], sub.root, sub.impl,
+        sub.interpret, pad_base, None,
     )
     return tuple(w[0] for w in skw), sv[0]
 
@@ -124,30 +163,31 @@ def _deal_all_to_all(x, ax, d, n_pad):
     return jax.lax.all_to_all(x, ax, split_axis=0, concat_axis=0, tiled=False)
 
 
-def sorted_shard(
-    keys_local,
-    vals_local: jax.Array,
-    spec: DistSortSpec,
-    cfg: SortConfig = DEFAULT_CONFIG,
-):
-    """Distributed sort body — call INSIDE shard_map over ``spec.axis``.
+def sorted_shard(keys_local, vals_local: jax.Array, plan: ShardPlan):
+    """Distributed sort body — call INSIDE shard_map over ``plan.axis``.
+
+    A pure EXECUTOR of the :class:`~repro.core.plan.ShardPlan`: every
+    static quantity (D, n_pad, s_loc, c_pair, out_cap, the four
+    per-phase local-sort schedules, impl/interpret) is read off the
+    plan; nothing is recomputed here (DESIGN.md §9).
 
     Args:
         keys_local: (n_local,) canonical uint32 key words — bare array
-            or tuple of word arrays (msw first, see ``core/key_codec``).
+            or tuple of word arrays (msw first, see ``core/key_codec``)
+            with ``plan.num_words`` words.
         vals_local: (n_local,) int32 payloads, globally unique (use
             global indices).
-        spec: static geometry (see :class:`DistSortSpec`).
-        cfg: pipeline knobs for the local sorts.
+        plan: the static distributed schedule
+            (:func:`repro.core.plan.build_shard_plan`).
     Returns:
         (keys (out_cap,) in the input structure, vals (out_cap,),
         count (), max_within ()) — valid prefix of each shard; shards
         concatenated in device order form the globally sorted sequence.
     """
     kw = as_words(keys_local)
-    ax = spec.axis
-    d, n_pad, s_loc, c_pair = spec.d, spec.n_pad, spec.s_loc, spec.c_pair
-    n_glob = n_pad * d
+    ax = plan.axis if len(plan.axis) > 1 else plan.axis[0]
+    d, n_pad, s_loc, c_pair = plan.d, plan.n_pad, plan.s_loc, plan.c_pair
+    n_glob = plan.n_glob
     pad_base = n_glob  # payloads are global indices < n_glob
 
     me = jax.lax.axis_index(ax)
@@ -163,7 +203,7 @@ def sorted_shard(
     pad_base += d * n_pad
 
     # 1. local sort
-    kw, v = _local_sort(kw, v, cfg, pad_base)
+    kw, v = _local_sort(kw, v, plan.run_plan, pad_base)
     pad_base += 4 * n_glob  # disjoint pad range headroom per phase
 
     # 2. deal: one static all_to_all transpose per word + payload
@@ -171,7 +211,7 @@ def sorted_shard(
     v = _deal_all_to_all(v, ax, d, n_pad).reshape(n_pad)
 
     # 3. local sort of dealt data
-    kw, v = _local_sort(kw, v, cfg, pad_base)
+    kw, v = _local_sort(kw, v, plan.dealt_plan, pad_base)
     pad_base += 4 * n_glob
 
     # 4. sampling -> replicated splitters (steps 3-5 of Algorithm 1)
@@ -180,7 +220,7 @@ def sorted_shard(
         jax.lax.all_gather(w[samp_idx], ax).reshape(d * s_loc) for w in kw
     )
     sv_all = jax.lax.all_gather(v[samp_idx], ax).reshape(d * s_loc)
-    sskw, ssv = _local_sort(skw_all, sv_all, cfg, pad_base)
+    sskw, ssv = _local_sort(skw_all, sv_all, plan.sample_plan, pad_base)
     pad_base += 4 * d * s_loc
     sp_idx = (jnp.arange(1, d, dtype=jnp.int32) * (d * s_loc)) // d
     spkw = tuple(w[sp_idx] for w in sskw)  # (D-1,) identical on every device
@@ -190,7 +230,7 @@ def sorted_shard(
     ranks = ops.splitter_ranks(
         tuple(w[None, :] for w in kw), v[None, :],
         tuple(w[None, :] for w in spkw), spv[None, :],
-        impl=cfg.impl, interpret=cfg.interpret,
+        impl=plan.impl, interpret=plan.interpret,
     )[0]  # (D-1,) in [0, n_pad]
     starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), ranks])
     ends = jnp.concatenate([ranks, jnp.full((1,), n_pad, jnp.int32)])
@@ -229,9 +269,9 @@ def sorted_shard(
     # 7. local sort of the received buckets (step 9); reals sort before pads
     fkw, fv = _local_sort(
         tuple(w.reshape(d * c_pair) for w in bkw), bv.reshape(d * c_pair),
-        cfg, pad_base,
+        plan.bucket_plan, pad_base,
     )
-    out_cap = spec.out_cap
+    out_cap = plan.out_cap
     count = jnp.sum(recv_counts, dtype=jnp.int32)
     # Padded shard elements (payload in [n_glob, n_glob + d*n_pad)) are real
     # inputs' pads: they sort after all true elements; exclude them.
@@ -247,9 +287,80 @@ def sorted_shard(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("mesh", "plan"))
+def _sharded_argsort(keys, mesh, plan: ShardPlan):
+    """The jit'd distributed entry.  ``mesh`` and ``plan`` are STATIC
+    arguments: two ``make_sharded_sort`` calls with equal
+    ``(shape, mesh, dtype, plan)`` signatures hit one compiled
+    executable (trace-once / zero-retrace, tested)."""
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1  # python side effect: runs once per TRACE
+    codec = codec_for(plan.dtype_name, plan.descending)
+    axt = plan.axis
+    n_loc = plan.n_local
+
+    def body(keys_local):
+        me = jax.lax.axis_index(axt if len(axt) > 1 else axt[0])
+        kw = codec.encode(keys_local)
+        gid = me * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
+        fkw, fv, count, max_within = sorted_shard(kw, gid, plan)
+        # Stack words into one (nw, out_cap) array so the shard_map
+        # out_specs stay structure-independent of the codec word count.
+        return (
+            jnp.stack(as_words(fkw))[None],
+            fv[None],
+            count[None],
+            max_within[None],
+        )
+
+    pspec = P(axt)
+    fkw, fv, counts, mw = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(pspec,),
+        out_specs=(P(axt, None, None), P(axt, None), pspec, pspec),
+    )(keys)
+    # fkw: (D, nw, out_cap) -> per-word (D*out_cap,) flats -> decode
+    words = tuple(fkw[:, i, :].reshape(-1) for i in range(codec.num_words))
+    return codec.decode(words), fv.reshape(-1), counts, mw
+
+
+def _axis_degree(mesh, axis) -> tuple[tuple[str, ...], int]:
+    axt = (axis,) if isinstance(axis, str) else tuple(axis)
+    d = 1
+    for a in axt:
+        d *= mesh.shape[a]
+    return axt, d
+
+
+def _resolve_shard_plan(
+    mesh, axt, d, n_global: int, dtype, cfg: SortConfig,
+    oversample: int, pair_align: int,
+) -> ShardPlan:
+    """Obtain the distributed plan per ``cfg.plan`` ("default" builds it
+    from the config; "autotune" goes through the persistent shard-plan
+    cache, tuning on the first miss; any other string loads a shard-plan
+    file saved by ``autotune.save_shard_plan``)."""
+    if cfg.plan == "default":
+        return build_shard_plan(
+            axt, d, n_global // d, dtype, cfg,
+            oversample=oversample, pair_align=pair_align,
+        )
+    from repro.core import autotune  # deferred: autotune imports core.plan
+
+    if cfg.plan == "autotune":
+        return autotune.shard_plan_for(
+            mesh, axt, n_global, dtype, cfg,
+            oversample=oversample, pair_align=pair_align,
+        )
+    return autotune.load_shard_plan(
+        cfg.plan, axis=axt, d=d, n_local=n_global // d, dtype=dtype, cfg=cfg,
+    )
+
+
 def make_sharded_sort(
     mesh, axis, n_global: int, cfg: SortConfig = DEFAULT_CONFIG,
-    oversample: int = 8,
+    oversample: int = 8, *, dtype=jnp.int32, pair_align: int = 8,
 ):
     """Build a jit'd distributed argsort over ``axis`` of ``mesh``.
 
@@ -257,62 +368,59 @@ def make_sharded_sort(
         mesh: jax device mesh.
         axis: mesh axis name (or tuple) to sort across; D = its size.
         n_global: total key count (must divide by D).
-        cfg: pipeline knobs (``descending`` supported; keys of any codec
-            dtype — 64-bit needs x64 mode).
-        oversample: regular-sampling oversample factor.
+        cfg: pipeline knobs (``descending`` supported; ``cfg.plan``
+            selects the schedule: "default" builds it from this config,
+            "autotune" uses the measured-best distributed plan from the
+            persistent cache, any other string loads a shard-plan
+            file).
+        oversample: regular-sampling oversample factor (power of two).
+        dtype: key dtype the returned fn accepts (any codec dtype —
+            64-bit needs x64 mode).  Part of the plan signature.
+        pair_align: lane alignment of the per-pair exchange capacity.
     Returns:
-        (fn, spec) where fn: (keys (n_global,) sharded over axis) ->
+        (fn, plan) where fn: (keys (n_global,) sharded over axis) ->
           (sorted_keys (D*out_cap,), payload_idx (D*out_cap,),
            counts (D,), max_within (D,))
         and the valid prefix of each shard (counts[i] elements)
         concatenated in shard order is the globally sorted sequence;
-        payloads are original global indices (an argsort).
+        payloads are original global indices (an argsort).  ``plan`` is
+        the frozen :class:`~repro.core.plan.ShardPlan` (capacities:
+        ``plan.c_pair``, ``plan.out_cap``, ``plan.d``).
+    Raises:
+        ValueError: naming the offending argument — ``axis`` spanning
+            fewer than 2 devices, ``n_global`` not divisible by D or
+            exceeding the int32 payload budget, or (at plan-build time)
+            a bad ``oversample``/``pair_align``.
     """
-    axt = (axis,) if isinstance(axis, str) else tuple(axis)
-    d = 1
-    for a in axt:
-        d *= mesh.shape[a]
-    assert d >= 2, "use bucket_sort.sort for a single device"
-    assert n_global % d == 0, (n_global, d)
-    assert n_global * 16 < 2**31, "int32 payload budget caps global n at ~2^27"
-    spec = DistSortSpec(axis=axis, d=d, n_local=n_global // d, oversample=oversample)
-
-    def body(keys_local):
-        n_loc = spec.n_local
-        me = jax.lax.axis_index(axis)
-        codec = codec_for(keys_local.dtype, cfg.descending)
-        kw = codec.encode(keys_local)
-        gid = me * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
-        fkw, fv, count, max_within = sorted_shard(kw, gid, spec, cfg)
-        # Stack words into one (nw, out_cap) array so the shard_map
-        # out_specs stay structure-independent of the codec word count.
-        return (
-            jnp.stack(fkw)[None],
-            fv[None],
-            count[None],
-            max_within[None],
+    axt, d = _axis_degree(mesh, axis)
+    if d < 2:
+        raise ValueError(
+            f"make_sharded_sort axis {axis!r} spans d={d} device(s); need "
+            "d >= 2 (use bucket_sort.sort on a single device)"
         )
+    if n_global % d != 0:
+        raise ValueError(
+            f"make_sharded_sort n_global ({n_global}) must be divisible by "
+            f"the axis device count d={d}"
+        )
+    if n_global * 16 >= 2**31:
+        raise ValueError(
+            f"make_sharded_sort n_global ({n_global}) exceeds the int32 "
+            f"payload budget (n_global * 16 < 2**31, i.e. n_global <= "
+            f"{2**27}): per-phase pad ranges are drawn from the int32 "
+            "payload space"
+        )
+    plan = _resolve_shard_plan(
+        mesh, axt, d, n_global, dtype, cfg, oversample, pair_align
+    )
 
-    pspec = P(axt)
-
-    @jax.jit
     def run(keys):
-        codec = codec_for(keys.dtype, cfg.descending)
-        fkw, fv, counts, mw = shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(pspec,),
-            out_specs=(P(axt, None, None), P(axt, None), pspec, pspec),
-        )(keys)
-        # fkw: (D, nw, out_cap) -> per-word (D*out_cap,) flats -> decode
-        words = tuple(
-            fkw[:, i, :].reshape(-1) for i in range(codec.num_words)
-        )
-        return (
-            codec.decode(words),
-            fv.reshape(-1),
-            counts,
-            mw,
-        )
+        if jnp.dtype(keys.dtype).name != plan.dtype_name:
+            raise ValueError(
+                f"keys dtype {jnp.dtype(keys.dtype).name} does not match "
+                f"the shard plan's dtype {plan.dtype_name} (pass dtype= to "
+                "make_sharded_sort)"
+            )
+        return _sharded_argsort(keys, mesh, plan)
 
-    return run, spec
+    return run, plan

@@ -495,6 +495,314 @@ def build_topk_plan(
 
 
 # ----------------------------------------------------------------------
+# ShardPlan: the distributed (multi-device) schedule as an IR node
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardGeometry:
+    """Static capacity arithmetic of the distributed deal-round sort
+    (all trace-time ints; the one source of truth for the bound —
+    ``DistSortSpec`` and :func:`build_shard_plan` both read it).
+
+    Derivation (DESIGN.md §9): regular sampling bounds every global
+    bucket at ``b_t <= n_pad * (1 + 1/oversample)``; the deal round
+    spreads each source's contribution to bucket t evenly over the D
+    devices (±1), so the per-device-pair chunk is bounded by the STATIC
+    ``c_pair = ceil(b_t / d) + d`` (lane-aligned to ``pair_align``) and
+    the exchange is one fixed-shape ``all_to_all``.
+
+    Attributes:
+        n_local: local shard length (pre-padding).
+        d: devices along the sort axis.
+        oversample: regular-sampling oversample factor c.
+        pair_align: lane-alignment multiple of the c_pair capacity
+            (the exchange-tiling knob the autotuner searches).
+        s_loc: local samples per shard (= oversample * d).
+        n_pad: shard length padded so the deal (multiple of d) and the
+            equidistant sampling (multiple of s_loc) are both exact.
+        b_t: max global bucket size, n_pad * (1 + 1/oversample).
+        c_pair: static per-pair all_to_all capacity.
+        out_cap: static per-shard output capacity >= any bucket total.
+    """
+
+    n_local: int
+    d: int
+    oversample: int
+    pair_align: int
+    s_loc: int
+    n_pad: int
+    b_t: int
+    c_pair: int
+    out_cap: int
+
+
+def shard_geometry(
+    n_local: int, d: int, oversample: int = 8, pair_align: int = 8
+) -> ShardGeometry:
+    """Compute the static distributed-sort geometry (validated).
+
+    Raises:
+        ValueError: naming the offending argument, matching the
+            ``SortConfig.__post_init__`` convention — ``oversample``
+            must be a power of two >= 1 (so ``s_loc = oversample * d``
+            stays power-of-two-compatible with the power-of-two device
+            meshes the deal targets), ``pair_align`` a power of two
+            >= 8, ``n_local`` >= 1.
+
+    Example:
+        >>> from repro.core.plan import shard_geometry
+        >>> g = shard_geometry(n_local=1000, d=4, oversample=8)
+        >>> (g.s_loc, g.n_pad, g.b_t, g.c_pair >= g.b_t // 4 + 4)
+        (32, 1024, 1152, True)
+    """
+    if not (isinstance(n_local, int) and n_local >= 1):
+        raise ValueError(
+            f"shard_geometry n_local must be an int >= 1, got {n_local!r}"
+        )
+    if not (isinstance(d, int) and d >= 2):
+        raise ValueError(
+            f"shard_geometry d must be an int >= 2 (devices along the "
+            f"sort axis), got {d!r}"
+        )
+    if not (
+        isinstance(oversample, int)
+        and oversample >= 1
+        and oversample & (oversample - 1) == 0
+    ):
+        raise ValueError(
+            "oversample must be a power of two >= 1 (keeps s_loc = "
+            f"oversample * d power-of-two-compatible), got {oversample!r}"
+        )
+    if not (
+        isinstance(pair_align, int)
+        and pair_align >= 8
+        and pair_align & (pair_align - 1) == 0
+    ):
+        raise ValueError(
+            f"pair_align must be a power of two >= 8, got {pair_align!r}"
+        )
+    s_loc = oversample * d
+    n_pad = round_up(n_local, s_loc)
+    b_t = n_pad + n_pad // oversample
+    c_pair = round_up(-(-b_t // d) + d, pair_align)
+    out_cap = min(round_up(b_t, 8), d * c_pair)
+    return ShardGeometry(
+        n_local=n_local,
+        d=d,
+        oversample=oversample,
+        pair_align=pair_align,
+        s_loc=s_loc,
+        n_pad=n_pad,
+        b_t=b_t,
+        c_pair=c_pair,
+        out_cap=out_cap,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """The full static schedule of one DISTRIBUTED sort signature.
+
+    Frozen and hashable — the jit static argument of the distributed
+    executor (``core/distributed_sort._sharded_argsort``): equal
+    ``(shape, mesh, dtype, plan)`` signatures share one compiled
+    executable, exactly as :class:`SortPlan` does for the single-device
+    path (trace-count discipline tested in ``tests/test_distributed``).
+
+    Attributes:
+        axis: mesh axis name tuple the sort spans (1 or 2 axes).
+        d: devices along the sort axis (product over ``axis``).
+        n_local / n_pad: shard length before/after deal+sampling padding.
+        oversample: regular-sampling oversample factor c.
+        pair_align: lane alignment of the per-pair exchange capacity
+            (the exchange-tiling knob; part of ``c_pair``).
+        s_loc: local samples per shard (oversample * d).
+        b_t: max global bucket size, n_pad * (1 + 1/oversample).
+        c_pair: STATIC per-pair all_to_all capacity (DESIGN.md §9).
+        out_cap: static per-shard output capacity (>= any bucket total).
+        dtype_name / num_words / descending: key codec identity.
+        impl / interpret / backend: resolved as in :class:`SortPlan`.
+        cfg_fingerprint: stable hash of the generating config.
+        run_plan: phase-1 local sort of the (1, n_pad) shard.
+        dealt_plan: phase-3 local sort of the dealt (1, n_pad) run.
+        sample_plan: replicated sort of the (1, d*s_loc) gathered
+            samples.
+        bucket_plan: phase-7 local sort of the received (1, d*c_pair)
+            buckets.  Each is a full :class:`SortPlan` and inherits the
+            per-level strategy dispatch (DESIGN.md §8), so shards can
+            e.g. radix-sort their local runs.
+    """
+
+    axis: tuple[str, ...]
+    d: int
+    n_local: int
+    n_pad: int
+    oversample: int
+    pair_align: int
+    s_loc: int
+    b_t: int
+    c_pair: int
+    out_cap: int
+    dtype_name: str
+    num_words: int
+    descending: bool
+    impl: str
+    interpret: bool
+    backend: str
+    cfg_fingerprint: str
+    run_plan: SortPlan
+    dealt_plan: SortPlan
+    sample_plan: SortPlan
+    bucket_plan: SortPlan
+
+    @property
+    def n_glob(self) -> int:
+        """Global padded element count (n_pad * d)."""
+        return self.n_pad * self.d
+
+    def signature(self) -> tuple:
+        """The cache identity: mesh signature (axis names + D), shard
+        shape, dtype+order, oversample/pair_align, resolved backend
+        triple, and the requesting config's fingerprint."""
+        return (
+            "x".join(self.axis),
+            self.d,
+            self.n_local,
+            self.dtype_name,
+            self.descending,
+            self.oversample,
+            self.pair_align,
+            self.impl,
+            self.interpret,
+            self.backend,
+            self.cfg_fingerprint,
+        )
+
+    def describe(self) -> str:
+        """Human-readable summary of the distributed schedule."""
+        lines = [
+            f"ShardPlan(axis={self.axis}, d={self.d}, "
+            f"n_local={self.n_local}->{self.n_pad}, "
+            f"dtype={self.dtype_name}"
+            f"{' desc' if self.descending else ''}, "
+            f"oversample={self.oversample}, c_pair={self.c_pair}, "
+            f"out_cap={self.out_cap}, impl={self.impl})"
+        ]
+        for name in ("run_plan", "dealt_plan", "sample_plan", "bucket_plan"):
+            sub: SortPlan = getattr(self, name)
+            lines.append(
+                f"  {name}: length={sub.length} levels={sub.num_levels} "
+                f"strategy={sub.root.strategy}"
+            )
+        return "\n".join(lines)
+
+
+@functools.lru_cache(maxsize=256)
+def _assemble_shard_plan(
+    axis: tuple[str, ...],
+    d: int,
+    n_local: int,
+    dtype_name: str,
+    nw: int,
+    descending: bool,
+    cfg: SortConfig,
+    oversample: int,
+    pair_align: int,
+    impl: str,
+    interpret: bool,
+    backend: str,
+) -> ShardPlan:
+    """Memoized shard-plan assembly (resolved backend triple in the
+    key, as in :func:`_assemble_plan`): repeated calls return the SAME
+    object, so the distributed executor's jit static-arg lookups are
+    fast and equal signatures share one executable."""
+    g = shard_geometry(n_local, d, oversample, pair_align)
+    sub = functools.partial(build_words_plan, num_words=nw, cfg=cfg)
+    return ShardPlan(
+        axis=axis,
+        d=d,
+        n_local=n_local,
+        n_pad=g.n_pad,
+        oversample=oversample,
+        pair_align=pair_align,
+        s_loc=g.s_loc,
+        b_t=g.b_t,
+        c_pair=g.c_pair,
+        out_cap=g.out_cap,
+        dtype_name=dtype_name,
+        num_words=nw,
+        descending=descending,
+        impl=impl,
+        interpret=interpret,
+        backend=backend,
+        cfg_fingerprint=config_fingerprint(cfg),
+        run_plan=sub(g.n_pad),
+        dealt_plan=sub(g.n_pad),
+        sample_plan=sub(d * g.s_loc),
+        bucket_plan=sub(d * g.c_pair),
+    )
+
+
+def build_shard_plan(
+    axis,
+    d: int,
+    n_local: int,
+    dtype,
+    cfg: SortConfig,
+    *,
+    oversample: int = 8,
+    pair_align: int = 8,
+) -> ShardPlan:
+    """Compute the full static distributed schedule for one signature.
+
+    Pure and deterministic, like :func:`build_plan`: the same
+    ``(axis, d, n_local, dtype, cfg, oversample, pair_align)`` produces
+    an equal (and identical-object, memoized) plan.  The executor in
+    ``core/distributed_sort.py`` derives nothing from it.
+
+    Args:
+        axis: mesh axis name (str) or tuple of names; normalized to a
+            tuple in the plan.
+        d: devices along the sort axis (>= 2).
+        n_local: per-shard element count (n_global // d).
+        dtype: key dtype (any ``core/key_codec`` dtype; 64-bit needs
+            x64 mode).
+        cfg: pipeline knobs for the per-phase local sorts
+            (``descending`` honored; ``plan`` is NOT consulted here —
+            plan selection happens in ``make_sharded_sort``).
+        oversample: regular-sampling oversample factor c (power of two
+            >= 1; bounds every global bucket at n_pad*(1 + 1/c)).
+        pair_align: lane-alignment multiple of the per-pair exchange
+            capacity (power of two >= 8).
+    Returns:
+        A frozen, hashable :class:`ShardPlan`.
+    Raises:
+        ValueError: naming the offending argument (``oversample``,
+            ``pair_align``, ``d``, ``n_local``) — validation happens at
+            plan-build time, not as a shape error mid-trace.
+
+    Example:
+        >>> from repro.core.plan import build_shard_plan
+        >>> from repro.core.sort_config import SortConfig
+        >>> p = build_shard_plan("data", 4, 2048, "int32",
+        ...                      SortConfig(impl="xla"), oversample=8)
+        >>> (p.axis, p.n_pad, p.c_pair % 8, p.out_cap >= p.b_t)
+        (('data',), 2048, 0, True)
+    """
+    import jax.numpy as jnp
+
+    axt = (axis,) if isinstance(axis, str) else tuple(axis)
+    codec = codec_for(dtype, cfg.descending)
+    impl, interpret, backend = _resolve_backend(cfg)
+    return _assemble_shard_plan(
+        axt, d, n_local, jnp.dtype(dtype).name, codec.num_words,
+        cfg.descending, cfg, oversample, pair_align, impl, interpret,
+        backend,
+    )
+
+
+# ----------------------------------------------------------------------
 # Serialization: byte-stable dict/JSON round-trip for the plan cache
 # ----------------------------------------------------------------------
 
@@ -554,3 +862,46 @@ def plan_json(plan: SortPlan) -> str:
     """Canonical JSON encoding (sorted keys) — byte-identical for equal
     plans; the determinism property tests compare these strings."""
     return json.dumps(plan_to_dict(plan), sort_keys=True)
+
+
+# v1: the initial distributed-schedule record.  The four per-phase
+# sub-plans are embedded as full sort_plan/v2 records, so a sort-plan
+# schema bump invalidates stored shard plans too (plan_from_dict raises
+# and the autotune store treats the record as a clean miss).
+_SHARD_SCHEMA = "shard_plan/v1"
+_SHARD_SUBPLANS = ("run_plan", "dealt_plan", "sample_plan", "bucket_plan")
+
+
+def shard_plan_to_dict(plan: ShardPlan) -> dict:
+    """JSON-serializable representation; inverse of
+    :func:`shard_plan_from_dict` (exact round-trip, tested)."""
+    d = dataclasses.asdict(plan)
+    d["axis"] = list(plan.axis)
+    for name in _SHARD_SUBPLANS:
+        d[name] = plan_to_dict(getattr(plan, name))
+    d["schema"] = _SHARD_SCHEMA
+    return d
+
+
+def shard_plan_from_dict(d: dict) -> ShardPlan:
+    """Reconstruct a :class:`ShardPlan` saved by
+    :func:`shard_plan_to_dict`.
+
+    Raises:
+        ValueError: on a missing/mismatched schema tag (also raised by
+            the embedded per-phase ``plan_from_dict`` calls for stale
+            sub-plan schemas).
+    """
+    d = dict(d)
+    schema = d.pop("schema", None)
+    if schema != _SHARD_SCHEMA:
+        raise ValueError(f"not a {_SHARD_SCHEMA} record (schema={schema!r})")
+    d["axis"] = tuple(d["axis"])
+    for name in _SHARD_SUBPLANS:
+        d[name] = plan_from_dict(d[name])
+    return ShardPlan(**d)
+
+
+def shard_plan_json(plan: ShardPlan) -> str:
+    """Canonical JSON encoding of a shard plan (sorted keys)."""
+    return json.dumps(shard_plan_to_dict(plan), sort_keys=True)
