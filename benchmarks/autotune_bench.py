@@ -1,74 +1,331 @@
-"""--suite autotune: the measured plan search at the acceptance size.
+"""--suite autotune: budgeted (cost-model pruned) plan search vs the
+exhaustive measured search, at the acceptance sizes.
 
-Runs ``core/autotune`` over the plan space (tile x s x block_rows x
-fusion x relocation) for the ``sort_throughput`` signature
-(int32, n = 2^20; quick: 2^18), records the default-config time, the
-best-found plan (geometry in ``derived``) and its speedup into
-BENCH_sort.json, then verifies a same-signature ``sort_planned`` call
-on the cached winner performs zero retraces (the serving property).
+Four legs, all merged into BENCH_sort.json:
+
+  * acceptance (local): exhaustive search over the full candidate space
+    vs ``measure_budget=5`` at n — the budgeted winner must land within
+    ``GAP_TOLERANCE`` (5%) of the exhaustive best wall time.  Rows end
+    in "ok" / "FAIL" so CI can assert on the recorded text.
+  * model error: predicted (cost model, HBM byte-equivalents) vs
+    measured micros for every exhaustively-measured candidate, plus
+    the Spearman rank correlation between the two orderings.
+  * transfer: a fresh plan store is seeded at n, then ``plan_for`` at a
+    NEW length must converge with <= 2 measurements (base +
+    transferred winner) and still land within tolerance of the
+    exhaustive best at that new length.
+  * shard acceptance: the same exhaustive-vs-budgeted comparison for
+    ``autotune_shard`` on a forced-host D=4 mesh, in a subprocess
+    (``--xla_force_host_platform_device_count`` must be set before jax
+    import; the parent keeps its real topology).
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-import numpy as np
+import json
+import os
+import subprocess
+import sys
+import tempfile
 
-from repro.core import autotune as autotune_mod
-from repro.core import bucket_sort
-from repro.core.sort_config import SortConfig
+_SELF = os.path.abspath(__file__)
+_ROOT = os.path.dirname(os.path.dirname(_SELF))
 
 # Match benchmarks/sort_throughput.py: the CPU container measures the
 # xla path; on TPU the pallas default kicks in via impl=None.
-CFG = SortConfig(tile=4096, s=64, direct_max=8192, impl="xla")
+GAP_TOLERANCE = 0.05
+BUDGET = 5
 
 
-def run(n=1048576, max_trials=12, repeats=3):
-    res = autotune_mod.autotune(
-        n, "int32", CFG, max_trials=max_trials, repeats=repeats
-    )
-    p = res.best_plan
-    geom = (
-        f"tile={p.root.tile or p.root.lp} s={p.root.s} "
-        f"levels={p.num_levels} reloc={p.root.relocation} "
-        f"block_rows={p.root.block_rows}"
-    )
-    rows = [
-        dict(
-            name=f"autotune/n={n}/default",
-            us_per_call=res.default_us,
-            derived=f"rate={n / res.default_us:.2f}Mkeys/s base config",
+def _cfg():
+    from repro.core.sort_config import SortConfig
+
+    return SortConfig(tile=4096, s=64, direct_max=8192, impl="xla")
+
+
+def _gap_row(name, best_us, ref_us, detail=""):
+    gap = best_us / ref_us - 1.0
+    ok = "ok" if gap <= GAP_TOLERANCE else "FAIL"
+    return dict(
+        name=name,
+        us_per_call=best_us,
+        derived=(
+            f"gap={gap * 100:+.1f}% vs exhaustive "
+            f"(tol {GAP_TOLERANCE * 100:.0f}%) {detail}{ok}"
         ),
-        dict(
-            name=f"autotune/n={n}/best",
-            us_per_call=res.best_us,
-            derived=(
-                f"rate={n / res.best_us:.2f}Mkeys/s "
-                f"speedup={res.speedup:.2f}x "
-                f"plan[{res.best_label}] {geom}"
-            ),
-        ),
-    ]
-    for t in sorted(res.trials, key=lambda t: t.us_per_call)[:5]:
-        rows.append(
-            dict(
-                name=f"autotune/n={n}/trial[{t.label}]",
-                us_per_call=t.us_per_call,
-                derived=f"{res.trials[0].us_per_call / t.us_per_call:.2f}x vs base",
-            )
+    )
+
+
+def _model_rows(prefix, result):
+    """Predicted-vs-measured rows from one exhaustive AutotuneResult."""
+    from benchmarks.common import spearman
+
+    measured = [c for c in result.candidates if c.us_per_call is not None]
+    rows = []
+    if len(measured) >= 2:
+        rho = spearman(
+            [c.predicted for c in measured],
+            [c.us_per_call for c in measured],
         )
-
-    # Zero-retrace check on the winner: the serving property the plan
-    # cache exists for (same plan object -> same jit executable).
-    rng = np.random.default_rng(1)
-    x = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32))
-    bucket_sort.sort_planned(x, p)
-    t0 = bucket_sort.trace_count()
-    bucket_sort.sort_planned(x, p)
-    rows.append(
-        dict(
-            name=f"autotune/n={n}/retrace_on_reuse",
+        rows.append(dict(
+            name=f"{prefix}/model_rank_corr",
             us_per_call=0.0,
-            derived=f"{bucket_sort.trace_count() - t0} (0 == plan reuse compiles nothing)",
-        )
-    )
+            derived=(
+                f"spearman={rho:.3f} over {len(measured)} measured "
+                f"candidates (predicted cost vs wall time)"
+            ),
+        ))
+    for c in sorted(measured, key=lambda c: c.us_per_call)[:5]:
+        rows.append(dict(
+            name=f"{prefix}/model[{c.label}]",
+            us_per_call=c.us_per_call,
+            derived=f"predicted={c.predicted:.0f} byte-equiv",
+        ))
     return rows
+
+
+def _count_measurements(autotune_mod, fn):
+    """Run ``fn()`` counting autotune._measure invocations."""
+    calls = []
+    orig = autotune_mod._measure
+
+    def _counting(f, x, **kw):
+        calls.append(1)
+        return orig(f, x, **kw)
+
+    autotune_mod._measure = _counting
+    try:
+        out = fn()
+    finally:
+        autotune_mod._measure = orig
+    return out, len(calls)
+
+
+def run(n=1048576, max_trials=12, repeats=3, shard_d=4, shard_repeats=2):
+    from repro.core import autotune as autotune_mod
+    from repro.core import bucket_sort
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    cfg = _cfg()
+    rows = []
+
+    # --- acceptance (local): exhaustive vs budgeted ------------------
+    exh = autotune_mod.autotune(
+        n, "int32", cfg, max_trials=max_trials, repeats=repeats,
+        measure_budget=None,
+    )
+    bud = autotune_mod.autotune(
+        n, "int32", cfg, max_trials=max_trials, repeats=repeats,
+        measure_budget=BUDGET,
+    )
+    n_meas = sum(1 for c in bud.candidates if c.us_per_call is not None)
+    rows.append(dict(
+        name=f"autotune/n={n}/exhaustive_best",
+        us_per_call=exh.best_us,
+        derived=(
+            f"rate={n / exh.best_us:.2f}Mkeys/s plan[{exh.best_label}] "
+            f"{len(exh.trials)} measured speedup={exh.speedup:.2f}x"
+        ),
+    ))
+    # Re-measure both winners back-to-back with identical median-of-k
+    # timing: each search's best_us is a min over noisy samples, and
+    # the exhaustive one is a min over MORE samples (selection bias),
+    # so comparing the raw numbers would over-report the gap.
+    from benchmarks.common import timeit_stats
+
+    rng0 = np.random.default_rng(2)
+    x0 = jnp.asarray(
+        rng0.integers(-(2**31), 2**31 - 1, n).astype(np.int32)
+    )
+    t_bud, _ = timeit_stats(
+        lambda a: bucket_sort.sort_planned(a, bud.best_plan), x0,
+        repeats=repeats + 1,
+    )
+    t_exh, _ = timeit_stats(
+        lambda a: bucket_sort.sort_planned(a, exh.best_plan), x0,
+        repeats=repeats + 1,
+    )
+    rows.append(_gap_row(
+        f"autotune/n={n}/acceptance/budgeted",
+        t_bud * 1e6, t_exh * 1e6,
+        detail=f"{n_meas} measured plan[{bud.best_label}] ",
+    ))
+    rows.extend(_model_rows(f"autotune/n={n}", exh))
+
+    # --- transfer: seed at n, converge at a new length ---------------
+    n2 = n * 2
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "plans.json")
+        memo_bak = dict(autotune_mod._MEMO)
+        autotune_mod.clear_memo()
+        autotune_mod.plan_for(
+            n, "int32", cfg, path=path, max_trials=max_trials,
+            repeats=repeats, measure_budget=BUDGET,
+        )
+        plan2, meas2 = _count_measurements(
+            autotune_mod,
+            lambda: autotune_mod.plan_for(
+                n2, "int32", cfg, path=path, max_trials=max_trials,
+                repeats=repeats, measure_budget=BUDGET,
+            ),
+        )
+        autotune_mod.clear_memo()
+        autotune_mod._MEMO.update(memo_bak)
+    exh2 = autotune_mod.autotune(
+        n2, "int32", cfg, max_trials=max_trials,
+        repeats=max(repeats - 1, 1), measure_budget=None,
+    )
+    rng = np.random.default_rng(3)
+    x2 = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, n2).astype(np.int32))
+    from benchmarks.common import timeit_stats
+
+    # Back-to-back re-measurement of BOTH winners with identical
+    # median-of-k timing: the exhaustive search's best_us is a min over
+    # many noisy samples (selection bias), so comparing a fresh
+    # measurement against it would over-report the gap.
+    t2, spread = timeit_stats(
+        lambda a: bucket_sort.sort_planned(a, plan2), x2,
+        repeats=repeats + 1,
+    )
+    t_ref, _ = timeit_stats(
+        lambda a: bucket_sort.sort_planned(a, exh2.best_plan), x2,
+        repeats=repeats + 1,
+    )
+    row = _gap_row(
+        f"autotune/n={n2}/acceptance/transfer",
+        t2 * 1e6, t_ref * 1e6,
+        detail=f"{meas2} measurements (<=2) spread={spread * 100:.0f}% ",
+    )
+    if meas2 > 2:
+        row["derived"] += " MEAS-FAIL"
+    rows.append(row)
+
+    # --- zero-retrace on the budgeted winner (serving property) ------
+    x = jnp.asarray(
+        np.random.default_rng(1).integers(-(2**31), 2**31 - 1, n)
+        .astype(np.int32)
+    )
+    bucket_sort.sort_planned(x, bud.best_plan)
+    t0 = bucket_sort.trace_count()
+    bucket_sort.sort_planned(x, bud.best_plan)
+    rows.append(dict(
+        name=f"autotune/n={n}/retrace_on_reuse",
+        us_per_call=0.0,
+        derived=(
+            f"{bucket_sort.trace_count() - t0} "
+            f"(0 == plan reuse compiles nothing)"
+        ),
+    ))
+
+    # --- shard acceptance on a forced-host D mesh --------------------
+    rows.extend(_shard_leg(
+        d=shard_d, n_global=n // 4, repeats=shard_repeats
+    ))
+    return rows
+
+
+def _shard_leg(d: int, n_global: int, repeats: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={d}"
+    ).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (_ROOT, os.path.join(_ROOT, "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    proc = subprocess.run(
+        [sys.executable, _SELF, "--shard-child", str(d), str(n_global),
+         str(repeats)],
+        env=env, capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"autotune shard child d={d} failed:\n{proc.stderr[-2000:]}")
+    line = next(l for l in proc.stdout.splitlines()
+                if l.startswith("RESULT "))
+    res = json.loads(line[len("RESULT "):])
+    rows = [dict(
+        name=f"autotune/shard_d{d}/exhaustive_best",
+        us_per_call=res["exh_best_us"],
+        derived=(
+            f"n_global={n_global} plan[{res['exh_label']}] "
+            f"{res['exh_measured']} measured"
+        ),
+    )]
+    rows.append(_gap_row(
+        f"autotune/shard_d{d}/acceptance/budgeted",
+        res["bud_best_us"], res["exh_best_us"],
+        detail=f"{res['bud_measured']} measured "
+               f"plan[{res['bud_label']}] ",
+    ))
+    rows.append(dict(
+        name=f"autotune/shard_d{d}/model_rank_corr",
+        us_per_call=0.0,
+        derived=(
+            f"spearman={res['spearman']:.3f} over "
+            f"{res['exh_measured']} measured candidates"
+        ),
+    ))
+    return rows
+
+
+def _shard_child(d: int, n_global: int, repeats: int) -> None:
+    # Runs under --xla_force_host_platform_device_count=d.
+    from benchmarks.common import spearman
+    from repro.core import autotune as autotune_mod
+    from repro.launch.mesh import make_mesh
+
+    cfg = _cfg()
+    mesh = make_mesh((d,), ("data",))
+    exh = autotune_mod.autotune_shard(
+        mesh, "data", n_global, "int32", cfg,
+        max_trials=8, repeats=repeats, measure_budget=None,
+    )
+    bud = autotune_mod.autotune_shard(
+        mesh, "data", n_global, "int32", cfg,
+        max_trials=8, repeats=repeats, measure_budget=BUDGET,
+    )
+    measured = [c for c in exh.candidates if c.us_per_call is not None]
+    rho = spearman(
+        [c.predicted for c in measured],
+        [c.us_per_call for c in measured],
+    ) if len(measured) >= 2 else 1.0
+    # Unbiased winner comparison (see run(): search best_us is a min
+    # over noisy samples): re-time both winner plans back to back.
+    import numpy as np
+    import jax.numpy as jnp
+
+    from benchmarks.common import timeit_stats
+    from repro.core import distributed_sort
+
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(
+        rng.integers(-(2**31), 2**31 - 1, n_global).astype(np.int32)
+    )
+    t_bud, _ = timeit_stats(
+        lambda a: distributed_sort._sharded_argsort(a, mesh, bud.best_plan),
+        x, repeats=repeats + 1,
+    )
+    t_exh, _ = timeit_stats(
+        lambda a: distributed_sort._sharded_argsort(a, mesh, exh.best_plan),
+        x, repeats=repeats + 1,
+    )
+    print("RESULT " + json.dumps(dict(
+        d=d, n_global=n_global,
+        exh_best_us=t_exh * 1e6, exh_label=exh.best_label,
+        exh_measured=len(measured),
+        bud_best_us=t_bud * 1e6, bud_label=bud.best_label,
+        bud_measured=sum(
+            1 for c in bud.candidates if c.us_per_call is not None
+        ),
+        spearman=rho,
+    )), flush=True)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) == 5 and sys.argv[1] == "--shard-child":
+        _shard_child(int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]))
+    else:
+        for r in run(n=262144, max_trials=8, repeats=2):
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -10,6 +10,19 @@ import numpy as np
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
     """Median wall time of fn(*args) with block_until_ready."""
+    return timeit_stats(fn, *args, repeats=repeats, warmup=warmup)[0]
+
+
+def timeit_stats(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Median-of-k timing with warmup-discard: run ``warmup`` calls
+    (compile + cache effects, discarded), then ``repeats`` timed calls.
+
+    Returns ``(median_s, spread)`` where spread is the relative
+    half-range ``(max - min) / (2 * median)`` of the timed samples — a
+    cheap noise indicator for rank-sensitive measurements (the autotune
+    suite records it so flipped winners are attributable to timer
+    noise rather than model error).
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -17,7 +30,28 @@ def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    med = float(np.median(ts))
+    spread = float((max(ts) - min(ts)) / (2 * med)) if med > 0 else 0.0
+    return med, spread
+
+
+def spearman(a, b) -> float:
+    """Spearman rank correlation of two equal-length sequences (no
+    scipy dependency; average ranks are not needed for the distinct
+    predicted costs the autotune suite feeds in)."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    n = len(a)
+    if n < 2:
+        return 1.0
+
+    def _ranks(v):
+        r = np.empty(n)
+        r[np.argsort(v, kind="stable")] = np.arange(n)
+        return r
+
+    ra, rb = _ranks(a), _ranks(b)
+    return float(1.0 - 6.0 * np.sum((ra - rb) ** 2) / (n * (n * n - 1)))
 
 
 # The six input distributions of Leischner et al. (the randomized sample

@@ -79,7 +79,8 @@ def main() -> None:
             n=65536 if quick else 262144, segments=64 if quick else 256),
         "autotune": lambda: autotune_bench.run(
             n=262144 if quick else 1048576,
-            max_trials=6 if quick else 12),
+            max_trials=8 if quick else 12,
+            repeats=2 if quick else 3),
         "strategies": lambda: strategies.run(
             n=262144 if quick else 1048576),
         "distributed": lambda: distributed_scaling.run(

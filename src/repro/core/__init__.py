@@ -5,10 +5,12 @@
 # baselines the paper compares against.
 
 # NOTE: the tuning and probing entries themselves stay namespaced
-# (repro.core.autotune.autotune, repro.core.probe.probe) — binding the
-# function name here would shadow the submodule.
+# (repro.core.autotune.autotune, repro.core.probe.probe,
+# repro.core.cost_model.estimate) — binding the function name here
+# would shadow the submodule (or read like it does).
 from repro.core.autotune import (
     AutotuneResult,
+    CandidateScore,
     load_plan,
     load_shard_plan,
     plan_for,
@@ -16,6 +18,7 @@ from repro.core.autotune import (
     save_shard_plan,
     shard_plan_for,
 )
+from repro.core.cost_model import COST_MODEL_VERSION, CostBreakdown, Priors
 from repro.core.bucket_sort import (
     argsort,
     argsort_batched,
@@ -83,6 +86,10 @@ __all__ = [
     "probed_config",
     "recommend_strategy",
     "AutotuneResult",
+    "CandidateScore",
+    "CostBreakdown",
+    "Priors",
+    "COST_MODEL_VERSION",
     "plan_for",
     "load_plan",
     "save_plan",

@@ -1,13 +1,28 @@
-"""Plan autotuner: measured search over the sort-plan space, with a
-persistent on-disk plan cache.
+"""Plan autotuner: analytically pruned, measured search over the
+sort-plan space, with a persistent on-disk plan cache.
 
 The planner (``core/plan.py``) makes the schedule explicit data; this
-module picks the BEST schedule for a signature by measuring real
-executions — the knobs that dominate throughput (``tile``, ``s``,
-``block_rows``, the fusion flags, the relocation mode) must be tuned
-per architecture and input size (Leischner et al.; Casanova et al.),
-and the deterministic pipeline makes every candidate a pure config
-swap.
+module picks the BEST schedule for a signature.  The knobs that
+dominate throughput (``tile``, ``s``, ``block_rows``, the fusion
+flags, the relocation mode, the local-sort strategy) must be tuned per
+architecture and input size (Leischner et al.; Casanova et al.), and
+the deterministic pipeline makes every candidate a pure config swap.
+
+Search protocol (DESIGN.md §10): every candidate in the space is
+scored by the analytic cost model (``core/cost_model.estimate``), and
+only the ``measure_budget`` cheapest-predicted candidates are timed on
+real executions — the base config (candidate 0) is always among them,
+so the winner is never slower than the default schedule.
+``measure_budget=None`` restores the exhaustive measured search.
+Predicted and measured cost for EVERY candidate are recorded on
+:class:`AutotuneResult` so model error is observable (the autotune
+benchmark suite writes it into ``BENCH_sort.json``).
+
+Cross-shape transfer: on a store miss at a new signature,
+:func:`plan_for` seeds the measured set from the cached winner at the
+NEAREST signature (same dtype/order/backend, nearest log2 n, then
+log2 rows) and caps the budget at 2 measurements (base + transferred
+winner) — warm workloads converge without a fresh search.
 
 Cache semantics (DESIGN.md §7): plans are cached under
 ``(shape, dtype, backend, cfg-fingerprint)`` — the signature of the
@@ -35,6 +50,7 @@ import time
 import jax
 import numpy as np
 
+from repro.core import cost_model
 from repro.core.plan import (
     ShardPlan,
     SortPlan,
@@ -252,6 +268,29 @@ class TrialResult:
 
 
 @dataclasses.dataclass(frozen=True)
+class CandidateScore:
+    """Predicted (and, when measured, observed) cost of one candidate.
+
+    One of these exists for EVERY candidate in the search space, not
+    just the measured ones — model error (predicted rank vs measured
+    rank) is observable from a single :class:`AutotuneResult`.
+
+    Attributes:
+        index: position in the candidate space (0 = base config).
+        label: the candidate's config-delta label.
+        predicted: analytic cost (HBM byte-equivalents,
+            ``cost_model.estimate(...).total``).
+        us_per_call: median measured micros, or None if the candidate
+            was pruned by the measure budget (or failed to run).
+    """
+
+    index: int
+    label: str
+    predicted: float
+    us_per_call: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
 class AutotuneResult:
     """Outcome of one tuning run.
 
@@ -261,7 +300,14 @@ class AutotuneResult:
             candidate 0 (the requesting config) — ``speedup`` is their
             ratio, >= 1.0 up to timer noise since the default is in the
             space.
-        trials: every candidate's measurement, search order.
+        trials: every MEASURED candidate, in candidate order (the base
+            config is always measured, so ``trials[0]`` is "base").
+        candidates: predicted vs measured for every candidate in the
+            space, candidate order (measured ones carry
+            ``us_per_call``).
+        measure_budget: the budget the run used (None = exhaustive).
+        cost_model_version: ``cost_model.COST_MODEL_VERSION`` at tune
+            time (persisted; a bump invalidates cached records).
     """
 
     best_plan: SortPlan
@@ -269,10 +315,47 @@ class AutotuneResult:
     best_us: float
     default_us: float
     trials: tuple[TrialResult, ...]
+    candidates: tuple[CandidateScore, ...] = ()
+    measure_budget: int | None = None
+    cost_model_version: str = cost_model.COST_MODEL_VERSION
 
     @property
     def speedup(self) -> float:
         return self.default_us / self.best_us if self.best_us else 1.0
+
+
+def _validate_budget(measure_budget) -> None:
+    if measure_budget is None:
+        return
+    if not isinstance(measure_budget, int) or isinstance(
+        measure_budget, bool
+    ) or measure_budget < 1:
+        raise ValueError(
+            f"measure_budget must be an int >= 1 (candidates to time) or "
+            f"None for the exhaustive measured search, got "
+            f"{measure_budget!r}"
+        )
+
+
+def _select_measured(
+    predicted: list[float],
+    measure_budget: int | None,
+    mandatory: list[int],
+) -> list[int]:
+    """Indices to time: the mandatory set (base config, transfer
+    seeds), then cheapest-predicted-first up to the budget.  Ties on
+    predicted cost break deterministically toward the lower candidate
+    index, so equal-cost reruns measure the same set."""
+    if measure_budget is None:
+        return list(range(len(predicted)))
+    chosen = list(dict.fromkeys(mandatory))
+    ranked = sorted(range(len(predicted)), key=lambda i: (predicted[i], i))
+    for i in ranked:
+        if len(chosen) >= measure_budget:
+            break
+        if i not in chosen:
+            chosen.append(i)
+    return sorted(chosen)
 
 
 def _measure(fn, x, *, repeats: int, warmup: int = 1) -> float:
@@ -316,38 +399,89 @@ def autotune(
     pad_rows: bool = False,
     max_trials: int = 16,
     repeats: int = 3,
+    warmup: int = 1,
     seed: int = 0,
+    measure_budget: int | None = 5,
+    priors: cost_model.Priors | None = None,
+    seed_cfgs: tuple[SortConfig, ...] = (),
 ) -> AutotuneResult:
-    """Measured search: build each candidate's plan, time the real
-    plan-driven executor on representative data, return the winner.
+    """Budgeted search: score every candidate's plan with the analytic
+    cost model, time only the ``measure_budget`` cheapest-predicted
+    candidates (base config always included) on representative data,
+    return the measured winner.
+
+    Args:
+        measure_budget: candidates to actually time (None =
+            exhaustive).  ValueError if not a positive int or None.
+        priors: distribution priors for the cost model (sortedness,
+            top-bits entropy — see ``core.probe.priors_for``); None
+            uses the uniform-random defaults.
+        seed_cfgs: extra configs appended to the candidate space and
+            FORCED into the measured set (the cross-shape transfer
+            path of :func:`plan_for` passes the nearest cached
+            winner's config here).
 
     Data is deterministic (seeded uniform keys of the target dtype), so
-    back-to-back runs rank candidates consistently up to timer noise.
+    back-to-back runs rank candidates consistently up to timer noise;
+    ties on predicted cost break toward the lower candidate index.
     """
     from repro.core import bucket_sort
 
+    _validate_budget(measure_budget)
     xj = _sample_input(length, dtype, rows, seed)
 
-    trials: list[TrialResult] = []
-    best_plan, best_label = None, ""
-    best_us, default_us = float("inf"), float("inf")
-    for i, cand in enumerate(candidate_space(cfg, length,
-                                             max_trials=max_trials)):
+    cands = candidate_space(cfg, length, max_trials=max_trials)
+    mandatory = [0]
+    seen_cfgs = {c.cfg for c in cands}
+    for sc in seed_cfgs:
+        sc = dataclasses.replace(sc, plan="default")
+        if sc in seen_cfgs:
+            mandatory.append(
+                next(i for i, c in enumerate(cands) if c.cfg == sc)
+            )
+            continue
+        seen_cfgs.add(sc)
+        cands.append(Candidate(cfg=sc, label="transfer"))
+        mandatory.append(len(cands) - 1)
+
+    plans: list[SortPlan] = []
+    predicted: list[float] = []
+    for cand in cands:
         plan = build_plan(
             length, dtype, cand.cfg, rows=rows, pad_rows=pad_rows
         )
+        plans.append(plan)
         try:
-            us = _measure(
-                lambda a, p=plan: bucket_sort.sort_planned(a, p), xj,
-                repeats=repeats,
-            )
-        except Exception:  # a candidate may be unrunnable on this backend
+            predicted.append(cost_model.estimate(plan, priors=priors).total)
+        except Exception:
+            predicted.append(float("inf"))
+
+    measured = set(_select_measured(predicted, measure_budget, mandatory))
+    trials: list[TrialResult] = []
+    scores: list[CandidateScore] = []
+    best_plan, best_label = None, ""
+    best_us, default_us = float("inf"), float("inf")
+    for i, cand in enumerate(cands):
+        us = None
+        if i in measured:
+            try:
+                us = _measure(
+                    lambda a, p=plans[i]: bucket_sort.sort_planned(a, p),
+                    xj, repeats=repeats, warmup=warmup,
+                )
+            except Exception:  # candidate may be unrunnable here
+                us = None
+        scores.append(CandidateScore(
+            index=i, label=cand.label, predicted=predicted[i],
+            us_per_call=us,
+        ))
+        if us is None:
             continue
         trials.append(TrialResult(label=cand.label, us_per_call=us))
         if i == 0:
             default_us = us
         if us < best_us:
-            best_plan, best_label, best_us = plan, cand.label, us
+            best_plan, best_label, best_us = plans[i], cand.label, us
     assert best_plan is not None, "no autotune candidate ran"
     return AutotuneResult(
         best_plan=best_plan,
@@ -355,12 +489,89 @@ def autotune(
         best_us=best_us,
         default_us=default_us,
         trials=tuple(trials),
+        candidates=tuple(scores),
+        measure_budget=measure_budget,
     )
 
 
 # ----------------------------------------------------------------------
-# The cfg.plan == "autotune" entry: cache-or-tune
+# The cfg.plan == "autotune" entry: cache-or-tune (with cross-shape
+# transfer seeding on a miss)
 # ----------------------------------------------------------------------
+
+
+def _record_is_current(rec: dict | None) -> bool:
+    """A persisted record is usable only if it was tuned under the
+    CURRENT cost-model version — a version bump means the analytic
+    pruning that picked the winner is no longer trusted, so the record
+    is a clean miss that re-tunes (mirrors the shard_plan/v1
+    schema-bump behavior)."""
+    return (
+        rec is not None
+        and rec.get("cost_model") == cost_model.COST_MODEL_VERSION
+    )
+
+
+def _cfg_from_winner_plan(plan: SortPlan, cfg: SortConfig):
+    """Reconstruct a tunable config from a cached winner plan's root
+    level, applied over the requesting ``cfg`` (the transfer seed).
+    None when the winner's geometry can't express a valid config."""
+    node = plan.root
+    kw: dict = dict(
+        plan="default",
+        block_rows=node.block_rows,
+        strategy=node.strategy,
+        radix_bits=node.radix_bits,
+        merge_run=node.merge_run,
+    )
+    if node.kind == "bucket":
+        kw.update(
+            tile=node.tile,
+            s=node.s,
+            fuse_sampling=node.fuse_sampling,
+            fuse_ranking=node.fuse_ranking,
+            relocation=node.relocation,
+        )
+        if node.tile > cfg.direct_max:
+            kw["direct_max"] = 2 * node.tile
+    try:
+        return dataclasses.replace(cfg, **kw)
+    except ValueError:
+        return None
+
+
+def _nearest_plan_record(
+    store: dict, base: SortPlan, key: str
+) -> tuple[SortPlan, str] | None:
+    """The cached winner at the signature NEAREST to ``base``: same
+    dtype/order/backend triple required, then prefer the same config
+    fingerprint, then the closest log2 length, then log2 rows (ties
+    break on the store key, so the choice is deterministic)."""
+    want = (base.dtype_name, str(base.descending), base.impl,
+            str(base.interpret), base.backend)
+    best = None
+    for k, rec in store["plans"].items():
+        if k == key or k.startswith("shard|"):
+            continue
+        if not _record_is_current(rec):
+            continue
+        parts = k.split("|")
+        if len(parts) != 8 or tuple(parts[2:7]) != want:
+            continue
+        try:
+            rows_k, length_k = int(parts[0]), int(parts[1])
+            plan = plan_from_dict(rec["plan"])
+        except (ValueError, TypeError, KeyError):
+            continue
+        dist = (
+            0 if parts[7] == base.cfg_fingerprint else 1,
+            abs(np.log2(max(length_k, 1)) - np.log2(max(base.length, 1))),
+            abs(np.log2(max(rows_k, 1)) - np.log2(max(base.rows, 1))),
+            k,
+        )
+        if best is None or dist < best[0]:
+            best = (dist, plan, k)
+    return (best[1], best[2]) if best else None
 
 
 def plan_for(
@@ -373,6 +584,9 @@ def plan_for(
     path: str | None = None,
     max_trials: int = 16,
     repeats: int = 3,
+    measure_budget: int | None = 5,
+    priors: cost_model.Priors | None = None,
+    transfer: bool = True,
 ) -> SortPlan:
     """Cached-or-tuned plan for a signature (the ``plan="autotune"``
     path).
@@ -381,6 +595,12 @@ def plan_for(
     :func:`autotune` and persist the winner.  The reloaded plan is
     EQUAL to the saved one, so jit's static-argument cache hits too —
     a plan-cache hit performs zero retraces (tested).
+
+    Persisted records carry the cost-model version; a record tuned
+    under a stale version is a clean miss that re-tunes.  On a miss
+    with ``transfer=True`` (default), the measured set is seeded from
+    the cached winner at the nearest signature and the budget drops to
+    ≤2 measurements (base + transferred winner).
     """
     base = build_plan(length, dtype, cfg, rows=rows, pad_rows=pad_rows)
     key = cache_key(base)
@@ -389,26 +609,47 @@ def plan_for(
     path = path or cache_path()
     store = _load_store(path)
     rec = store["plans"].get(key)
-    if rec is not None:
+    if rec is not None and _record_is_current(rec):
         try:
             plan = plan_from_dict(rec["plan"])
         except (ValueError, TypeError):
             # A record from an older plan schema (e.g. pre-strategy
             # sort_plan/v1): treat as a clean miss — re-tune below and
             # overwrite, never misread a stale plan.
-            rec = None
+            pass
         else:
             _MEMO[key] = plan
             return plan
+
+    seed_cfgs: tuple[SortConfig, ...] = ()
+    budget = measure_budget
+    transfer_from = None
+    if transfer and measure_budget is not None:
+        near = _nearest_plan_record(store, base, key)
+        if near is not None:
+            seed_cfg = _cfg_from_winner_plan(near[0], cfg)
+            if seed_cfg is not None:
+                seed_cfgs = (seed_cfg,)
+                budget = min(measure_budget, 2)
+                transfer_from = near[1]
+
     result = autotune(
         length, dtype, cfg, rows=rows, pad_rows=pad_rows,
         max_trials=max_trials, repeats=repeats,
+        measure_budget=budget, priors=priors, seed_cfgs=seed_cfgs,
     )
     store["plans"][key] = dict(
         plan=plan_to_dict(result.best_plan),
         best_us=round(result.best_us, 1),
         default_us=round(result.default_us, 1),
         speedup=round(result.speedup, 3),
+        cost_model=result.cost_model_version,
+        measure_budget=result.measure_budget,
+        measured=sum(
+            1 for c in result.candidates if c.us_per_call is not None
+        ),
+        candidates=len(result.candidates),
+        **({"transfer_from": transfer_from} if transfer_from else {}),
     )
     _save_store(path, store)
     _MEMO[key] = result.best_plan
@@ -508,11 +749,18 @@ def autotune_shard(
     pair_align: int = 8,
     max_trials: int = 8,
     repeats: int = 2,
+    warmup: int = 1,
     seed: int = 0,
+    measure_budget: int | None = 5,
+    priors: cost_model.Priors | None = None,
+    seed_candidates: tuple[ShardCandidate, ...] = (),
 ) -> AutotuneResult:
-    """Measured search over the distributed schedule space: build each
-    candidate's :class:`ShardPlan`, time the real jit'd distributed
-    executor on representative data over ``mesh``, return the winner.
+    """Budgeted search over the distributed schedule space: score each
+    candidate's :class:`ShardPlan` analytically (including the
+    ``c_pair``-padded collective volume), time only the
+    ``measure_budget`` cheapest-predicted candidates (base always
+    included) on the real jit'd distributed executor over ``mesh``,
+    return the measured winner.
 
     Needs a mesh whose ``axis`` spans >= 2 devices (forced-host meshes
     in tests/benchmarks); data is deterministic so back-to-back runs
@@ -520,38 +768,72 @@ def autotune_shard(
     """
     from repro.core import distributed_sort
 
+    _validate_budget(measure_budget)
     axt = (axis,) if isinstance(axis, str) else tuple(axis)
     d = 1
     for a in axt:
         d *= mesh.shape[a]
     xj = _sample_input(n_global, dtype, 1, seed)
 
-    trials: list[TrialResult] = []
-    best_plan, best_label = None, ""
-    best_us, default_us = float("inf"), float("inf")
     space = shard_candidate_space(
         cfg, oversample=oversample, pair_align=pair_align,
         max_trials=max_trials,
     )
-    for i, cand in enumerate(space):
+    mandatory = [0]
+    seen = {(c.cfg, c.oversample, c.pair_align) for c in space}
+    for sc in seed_candidates:
+        k = (sc.cfg, sc.oversample, sc.pair_align)
+        if k in seen:
+            mandatory.append(next(
+                i for i, c in enumerate(space)
+                if (c.cfg, c.oversample, c.pair_align) == k
+            ))
+            continue
+        seen.add(k)
+        space.append(sc)
+        mandatory.append(len(space) - 1)
+
+    plans: list[ShardPlan] = []
+    predicted: list[float] = []
+    for cand in space:
         plan = build_shard_plan(
             axt, d, n_global // d, dtype, cand.cfg,
             oversample=cand.oversample, pair_align=cand.pair_align,
         )
+        plans.append(plan)
         try:
-            us = _measure(
-                lambda a, p=plan: distributed_sort._sharded_argsort(
-                    a, mesh, p
-                ),
-                xj, repeats=repeats,
-            )
-        except Exception:  # a candidate may be unrunnable on this backend
+            predicted.append(cost_model.estimate(plan, priors=priors).total)
+        except Exception:
+            predicted.append(float("inf"))
+
+    measured = set(_select_measured(predicted, measure_budget, mandatory))
+    trials: list[TrialResult] = []
+    scores: list[CandidateScore] = []
+    best_plan, best_label = None, ""
+    best_us, default_us = float("inf"), float("inf")
+    for i, cand in enumerate(space):
+        us = None
+        if i in measured:
+            try:
+                us = _measure(
+                    lambda a, p=plans[i]: distributed_sort._sharded_argsort(
+                        a, mesh, p
+                    ),
+                    xj, repeats=repeats, warmup=warmup,
+                )
+            except Exception:  # candidate may be unrunnable here
+                us = None
+        scores.append(CandidateScore(
+            index=i, label=cand.label, predicted=predicted[i],
+            us_per_call=us,
+        ))
+        if us is None:
             continue
         trials.append(TrialResult(label=cand.label, us_per_call=us))
         if i == 0:
             default_us = us
         if us < best_us:
-            best_plan, best_label, best_us = plan, cand.label, us
+            best_plan, best_label, best_us = plans[i], cand.label, us
     assert best_plan is not None, "no distributed autotune candidate ran"
     return AutotuneResult(
         best_plan=best_plan,
@@ -559,6 +841,63 @@ def autotune_shard(
         best_us=best_us,
         default_us=default_us,
         trials=tuple(trials),
+        candidates=tuple(scores),
+        measure_budget=measure_budget,
+    )
+
+
+def _nearest_shard_record(
+    store: dict, base: ShardPlan, key: str
+) -> tuple[ShardPlan, str] | None:
+    """The cached distributed winner at the mesh signature NEAREST to
+    ``base``: same dtype/order/backend triple required, then prefer
+    the same config fingerprint, then the closest log2 shard length,
+    then log2 D (deterministic key tie-break)."""
+    want = (base.dtype_name, str(base.descending), base.impl,
+            str(base.interpret), base.backend)
+    best = None
+    for k, rec in store["plans"].items():
+        if k == key or not k.startswith("shard|"):
+            continue
+        if not _record_is_current(rec):
+            continue
+        parts = k.split("|")[1:]
+        if len(parts) != 11 or (
+            tuple(parts[3:5]) + tuple(parts[7:10])
+        ) != want:
+            continue
+        try:
+            d_k, n_local_k = int(parts[1]), int(parts[2])
+            plan = shard_plan_from_dict(rec["plan"])
+        except (ValueError, TypeError, KeyError):
+            continue
+        dist = (
+            0 if parts[10] == base.cfg_fingerprint else 1,
+            abs(np.log2(max(n_local_k, 1))
+                - np.log2(max(base.n_local, 1))),
+            abs(np.log2(max(d_k, 1)) - np.log2(max(base.d, 1))),
+            k,
+        )
+        if best is None or dist < best[0]:
+            best = (dist, plan, k)
+    return (best[1], best[2]) if best else None
+
+
+def _shard_seed_from_record(plan: ShardPlan, cfg: SortConfig):
+    """Transfer seed for the distributed search: the cached winner's
+    oversample/pair_align plus its run-phase local-sort strategy,
+    applied over the requesting ``cfg``."""
+    node = plan.run_plan.root
+    try:
+        seed_cfg = dataclasses.replace(
+            cfg, plan="default", strategy=node.strategy,
+            radix_bits=node.radix_bits, merge_run=node.merge_run,
+        )
+    except ValueError:
+        return None
+    return ShardCandidate(
+        cfg=seed_cfg, oversample=plan.oversample,
+        pair_align=plan.pair_align, label="transfer",
     )
 
 
@@ -574,6 +913,9 @@ def shard_plan_for(
     path: str | None = None,
     max_trials: int = 8,
     repeats: int = 2,
+    measure_budget: int | None = 5,
+    priors: cost_model.Priors | None = None,
+    transfer: bool = True,
 ) -> ShardPlan:
     """Cached-or-tuned distributed plan (the ``plan="autotune"`` path of
     ``make_sharded_sort``).
@@ -584,6 +926,11 @@ def shard_plan_for(
     is EQUAL to the saved one, so the distributed jit entry's static-arg
     cache hits too — a shard-plan-cache hit performs zero retraces
     (tested on forced-host meshes).
+
+    Records carry the cost-model version (stale version = clean miss),
+    and a miss with ``transfer=True`` seeds from the nearest cached
+    mesh signature with the budget capped at 2 measurements, exactly
+    as :func:`plan_for` does for the local path.
     """
     axt = (axis,) if isinstance(axis, str) else tuple(axis)
     d = 1
@@ -599,24 +946,45 @@ def shard_plan_for(
     path = path or cache_path()
     store = _load_store(path)
     rec = store["plans"].get(key)
-    if rec is not None:
+    if rec is not None and _record_is_current(rec):
         try:
             plan = shard_plan_from_dict(rec["plan"])
         except (ValueError, TypeError):
-            rec = None  # stale schema: clean miss, re-tune and overwrite
+            pass  # stale schema: clean miss, re-tune and overwrite
         else:
             _SHARD_MEMO[key] = plan
             return plan
+
+    seeds: tuple[ShardCandidate, ...] = ()
+    budget = measure_budget
+    transfer_from = None
+    if transfer and measure_budget is not None:
+        near = _nearest_shard_record(store, base, key)
+        if near is not None:
+            seed = _shard_seed_from_record(near[0], cfg)
+            if seed is not None:
+                seeds = (seed,)
+                budget = min(measure_budget, 2)
+                transfer_from = near[1]
+
     result = autotune_shard(
         mesh, axt, n_global, dtype, cfg,
         oversample=oversample, pair_align=pair_align,
         max_trials=max_trials, repeats=repeats,
+        measure_budget=budget, priors=priors, seed_candidates=seeds,
     )
     store["plans"][key] = dict(
         plan=shard_plan_to_dict(result.best_plan),
         best_us=round(result.best_us, 1),
         default_us=round(result.default_us, 1),
         speedup=round(result.speedup, 3),
+        cost_model=result.cost_model_version,
+        measure_budget=result.measure_budget,
+        measured=sum(
+            1 for c in result.candidates if c.us_per_call is not None
+        ),
+        candidates=len(result.candidates),
+        **({"transfer_from": transfer_from} if transfer_from else {}),
     )
     _save_store(path, store)
     _SHARD_MEMO[key] = result.best_plan

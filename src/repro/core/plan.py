@@ -106,6 +106,31 @@ class LevelPlan:
     sample_plan: "LevelPlan | None" = None
     bucket_plan: "LevelPlan | None" = None
 
+    # -- cost-relevant derived geometry (properties, not serialized;
+    #    core/cost_model.py reads these instead of re-deriving) --------
+
+    @property
+    def elements(self) -> int:
+        """Padded elements entering this level (rows * lp)."""
+        return self.rows * self.lp
+
+    @property
+    def tiles(self) -> int:
+        """Tile count of the level's local sort (bucket: rows * m)."""
+        return self.rows * self.m if self.kind == "bucket" else self.rows
+
+    @property
+    def sample_elements(self) -> int:
+        """Step-3 sample array size this level emits (0 for direct)."""
+        return self.rows * self.m * self.s if self.kind == "bucket" else 0
+
+    @property
+    def bucket_elements(self) -> int:
+        """Dense bucket-array size after relocation (0 for direct)."""
+        if self.kind != "bucket":
+            return 0
+        return self.rows * self.s_round * self.cap
+
 
 @dataclasses.dataclass(frozen=True)
 class SortPlan:
@@ -141,6 +166,12 @@ class SortPlan:
     rows_padded: int
     cfg_fingerprint: str
     root: LevelPlan
+
+    @property
+    def bytes_per_element(self) -> int:
+        """HBM bytes one element occupies on the hot path: the key
+        words plus the int32 payload word (cost-model input)."""
+        return 4 * (self.num_words + 1)
 
     @property
     def num_levels(self) -> int:
@@ -439,6 +470,16 @@ class TopkPlan:
     radix_bits: int = 4
     merge_run: int = 512
 
+    @property
+    def elements(self) -> int:
+        """Padded elements entering the bucket round (rows * lp)."""
+        return max(self.rows, 1) * self.lp
+
+    @property
+    def candidate_elements(self) -> int:
+        """Candidate-buffer elements of the final pack (rows * ccap)."""
+        return max(self.rows, 1) * self.ccap
+
 
 @functools.lru_cache(maxsize=512)
 def _assemble_topk_plan(
@@ -660,6 +701,24 @@ class ShardPlan:
     def n_glob(self) -> int:
         """Global padded element count (n_pad * d)."""
         return self.n_pad * self.d
+
+    @property
+    def bytes_per_element(self) -> int:
+        """HBM/interconnect bytes per element (key words + payload)."""
+        return 4 * (self.num_words + 1)
+
+    @property
+    def exchange_elements(self) -> int:
+        """Per-device bucket-exchange volume, c_pair-padded (d * c_pair
+        elements sent and received in the fixed-shape all_to_all)."""
+        return self.d * self.c_pair
+
+    @property
+    def collective_elements(self) -> int:
+        """Total per-device interconnect elements across the schedule:
+        the deal all_to_all (n_pad) + the sample gather (d * s_loc) +
+        the bucket exchange (d * c_pair) — cost-model input."""
+        return self.n_pad + self.d * self.s_loc + self.exchange_elements
 
     def signature(self) -> tuple:
         """The cache identity: mesh signature (axis names + D), shard

@@ -137,6 +137,35 @@ def recommend_strategy(x, cfg: SortConfig = DEFAULT_CONFIG, *,
     return "bitonic"
 
 
+def priors_for(x, cfg: SortConfig = DEFAULT_CONFIG, *,
+               sample_size: int = 4096):
+    """Distribution priors for the analytic cost model, measured on a
+    host-side sample of ``x`` — the bridge between the probe's two
+    signals and strategy-dependent cost terms (DESIGN.md §10):
+    ``sortedness`` discounts the merge path's compare work,
+    ``top_bits_entropy`` scales the radix pass count for skewed digit
+    histograms.  Feed the result to ``autotune(..., priors=...)`` or
+    ``plan_for(..., priors=...)`` so the analytic pruning ranks
+    candidates for THIS data rather than for uniform-random keys.
+
+    Example:
+        >>> import numpy as np
+        >>> from repro.core import probe
+        >>> from repro.core.sort_config import SortConfig
+        >>> pri = probe.priors_for(np.arange(4096, dtype=np.int32))
+        >>> pri.sortedness
+        1.0
+    """
+    from repro.core.cost_model import Priors
+
+    _require_concrete(x)
+    sig = probe(x, sample_size=sample_size, descending=cfg.descending)
+    return Priors(
+        sortedness=sig["sortedness"],
+        top_bits_entropy=sig["top_bits_entropy"],
+    )
+
+
 def probed_config(x, cfg: SortConfig = DEFAULT_CONFIG, *,
                   sample_size: int = 4096) -> SortConfig:
     """``cfg`` with ``strategy`` replaced by the probe's pick — the
