@@ -34,9 +34,11 @@ def run(n=262144, repeats=2):
         det_times.append(tt)
         fills = []
         for seed in range(3):
+            # max_attempts=1: raw single-shot mode so overflow stays
+            # OBSERVABLE (the retry loop would mask the C2 quantity).
             _, _, (mf, ovf) = baselines.randomized_sample_sort(
                 x, jax.random.PRNGKey(seed), CFG, capacity_factor=4.0,
-                with_stats=True)
+                with_stats=True, max_attempts=1)
             fills.append(int(mf))
         rnd_fills.append(fills)
         rows.append(dict(

@@ -1,0 +1,80 @@
+"""Checked-mode overhead (DESIGN.md §11): the price of running the
+paper's capacity invariant (``check='bounds'``) and the full
+permutation+sortedness post-conditions (``check='full'``) on every
+sort, versus ``check='off'``.
+
+Acceptance (ISSUE 10): 'bounds' overhead <= 15% vs 'off' at n=2^20 on
+the CPU proxy — recorded as an ok/FAIL row so the trajectory catches a
+regression that makes checked mode unaffordable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+import jax
+
+from benchmarks.common import timeit
+from repro.core import bucket_sort, faults
+from repro.core.sort_config import SortConfig
+
+CFG = SortConfig(tile=4096, s=64, direct_max=8192, impl="xla")
+
+ACCEPT_OVERHEAD = 0.15  # 'bounds' may cost at most 15% over 'off'
+
+
+def _interleaved_medians(fns: dict, rounds: int) -> dict:
+    """Round-robin timing: one call of each mode per round, medians per
+    mode.  Machine drift hits all modes equally instead of whichever
+    mode happened to run during the slow minute."""
+    import time
+
+    for fn in fns.values():  # warmup: compile every executable first
+        jax.block_until_ready(fn())
+    samples: dict = {k: [] for k in fns}
+    for _ in range(rounds):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples[k].append(time.perf_counter() - t0)
+    return {k: float(np.median(v)) for k, v in samples.items()}
+
+
+def run(n=1048576, repeats=3):
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32))
+    rows = []
+    cfgs = {c: dataclasses.replace(CFG, check=c)
+            for c in ("off", "bounds", "full")}
+    times = _interleaved_medians(
+        {c: (lambda cfg=cfg: bucket_sort.sort(x, cfg))
+         for c, cfg in cfgs.items()},
+        rounds=max(repeats, 3))
+    base = times["off"]
+    for check in ("off", "bounds", "full"):
+        ovh = times[check] / base - 1.0
+        rows.append(dict(
+            name=f"guard/check={check}", us_per_call=times[check] * 1e6,
+            derived=(f"n={n} overhead={100*ovh:+.1f}% vs off"
+                     if check != "off" else f"n={n} baseline")))
+
+    # unarmed fault-site cost: pure dict lookup + counter increment
+    faults.reset()
+    t0 = timeit(lambda: None, repeats=repeats, warmup=0)
+    t1 = timeit(lambda: faults.check("kernel.launch"), repeats=repeats,
+                warmup=0)
+    rows.append(dict(
+        name="guard/faults_check_unarmed", us_per_call=(t1 - t0) * 1e6,
+        derived="per-call cost of an unarmed faults.check site"))
+
+    bounds_ovh = times["bounds"] / base - 1.0
+    ok = bounds_ovh <= ACCEPT_OVERHEAD
+    rows.append(dict(
+        name="guard/acceptance/bounds_overhead", us_per_call=0.0,
+        derived=(f"bounds={100*bounds_ovh:+.1f}% vs off at n={n} "
+                 f"(budget {100*ACCEPT_OVERHEAD:.0f}%) "
+                 + ("ok" if ok else "FAIL"))))
+    return rows

@@ -48,6 +48,7 @@ def main() -> None:
         distributed_scaling,
         distribution_robustness,
         dtypes_throughput,
+        guard_overhead,
         moe_dispatch,
         sample_size_sweep,
         sort_throughput,
@@ -85,6 +86,9 @@ def main() -> None:
             n=262144 if quick else 1048576),
         "distributed": lambda: distributed_scaling.run(
             n_global=65536 if quick else 262144,
+            repeats=2 if quick else 3),
+        "guard": lambda: guard_overhead.run(
+            n=262144 if quick else 1048576,
             repeats=2 if quick else 3),
     }
     only = set(args.only.split(",")) if args.only else None

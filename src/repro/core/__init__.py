@@ -34,6 +34,15 @@ from repro.core.bucket_sort import (
     sort_with_stats,
 )
 from repro.core.distributed_sort import DistSortSpec, make_sharded_sort, sorted_shard
+from repro.core.faults import FaultInjected
+from repro.core.guard import (
+    CHECK_MODES,
+    DegradationEvent,
+    DegradationWarning,
+    SortRuntimeError,
+    clear_degradation_log,
+    degradation_log,
+)
 from repro.core.key_codec import SUPPORTED_DTYPES, KeyCodec, codec_for
 from repro.core.partial_sort import topk, topk_batched
 from repro.core.probe import probed_config, recommend_strategy
@@ -104,4 +113,11 @@ __all__ = [
     "DistSortSpec",
     "make_sharded_sort",
     "sorted_shard",
+    "CHECK_MODES",
+    "DegradationEvent",
+    "DegradationWarning",
+    "FaultInjected",
+    "SortRuntimeError",
+    "clear_degradation_log",
+    "degradation_log",
 ]

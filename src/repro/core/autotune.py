@@ -46,11 +46,12 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 
 import jax
 import numpy as np
 
-from repro.core import cost_model
+from repro.core import cost_model, faults, guard
 from repro.core.plan import (
     ShardPlan,
     SortPlan,
@@ -92,18 +93,59 @@ def cache_key(plan: SortPlan) -> str:
     return "|".join(str(x) for x in plan.signature())
 
 
-def _load_store(path: str) -> dict:
+def _fresh_store() -> dict:
+    return {"schema": _STORE_SCHEMA, "plans": {}, "denylist": {}}
+
+
+def _quarantine_store(path: str, err: Exception) -> None:
+    """Corrupt store recovery (DESIGN.md §11): atomically rename the
+    unparseable file to ``<path>.corrupt-<pid>`` — NEVER overwrite it
+    in place (the evidence survives, and the next save rebuilds a clean
+    store) — and warn once."""
+    qpath = f"{path}.corrupt-{os.getpid()}"
     try:
+        os.replace(path, qpath)
+    except OSError:
+        qpath = "<rename failed; left in place>"
+    warnings.warn(
+        f"plan cache {path} is corrupt ({type(err).__name__}: {err}); "
+        f"quarantined to {qpath} and rebuilding a clean store",
+        guard.DegradationWarning,
+        stacklevel=3,
+    )
+
+
+def _load_store(path: str) -> dict:
+    """Read the JSON plan store; degrade to an empty store on any
+    failure (degradation chain: a broken cache must never break a
+    sort).  Corrupt JSON is quarantined (atomic rename) so the bytes
+    survive for inspection; unreadable files (I/O errors, injected
+    ``cache.load`` faults) warn and fall back without quarantine."""
+    try:
+        faults.check("cache.load")
         with open(path) as f:
             store = json.load(f)
-    except (FileNotFoundError, json.JSONDecodeError):
-        return {"schema": _STORE_SCHEMA, "plans": {}}
+    except FileNotFoundError:
+        return _fresh_store()
+    except json.JSONDecodeError as e:
+        _quarantine_store(path, e)
+        return _fresh_store()
+    except (faults.FaultInjected, OSError) as e:
+        warnings.warn(
+            f"plan cache {path} unreadable ({type(e).__name__}: {e}); "
+            f"continuing with an empty store",
+            guard.DegradationWarning,
+            stacklevel=2,
+        )
+        return _fresh_store()
     if store.get("schema") != _STORE_SCHEMA:
-        return {"schema": _STORE_SCHEMA, "plans": {}}
+        return _fresh_store()
+    store.setdefault("denylist", {})
     return store
 
 
 def _save_store(path: str, store: dict) -> None:
+    faults.check("cache.save")
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
@@ -112,6 +154,19 @@ def _save_store(path: str, store: dict) -> None:
         json.dump(store, f, indent=1, sort_keys=True)
         f.write("\n")
     os.replace(tmp, path)
+
+
+def _persist_store(path: str, store: dict) -> None:
+    """Best-effort store persist for the tune-and-cache paths: a failed
+    save (I/O error, injected ``cache.save`` fault) degrades to
+    memo-only caching — the tuned plan is still returned and memoized,
+    only the cross-process record is lost (recorded + warned)."""
+    try:
+        _save_store(path, store)
+    except (faults.FaultInjected, OSError) as e:
+        guard.record_degradation(
+            "cache.save", "fallback", f"persist to {path}",
+            "process-memo only (store not written)", e)
 
 
 def save_plan(plan: SortPlan, path: str, *, meta: dict | None = None) -> None:
@@ -308,6 +363,10 @@ class AutotuneResult:
         measure_budget: the budget the run used (None = exhaustive).
         cost_model_version: ``cost_model.COST_MODEL_VERSION`` at tune
             time (persisted; a bump invalidates cached records).
+        failed: (label, error) for every candidate that exhausted the
+            measurement retry chain this run — ``plan_for`` persists
+            these into the store's per-signature denylist.
+        skipped: labels excluded up front by the caller's denylist.
     """
 
     best_plan: SortPlan
@@ -318,6 +377,8 @@ class AutotuneResult:
     candidates: tuple[CandidateScore, ...] = ()
     measure_budget: int | None = None
     cost_model_version: str = cost_model.COST_MODEL_VERSION
+    failed: tuple[tuple[str, str], ...] = ()
+    skipped: tuple[str, ...] = ()
 
     @property
     def speedup(self) -> float:
@@ -359,6 +420,7 @@ def _select_measured(
 
 
 def _measure(fn, x, *, repeats: int, warmup: int = 1) -> float:
+    faults.check("autotune.measure")
     for _ in range(warmup):
         jax.block_until_ready(fn(x))
     ts = []
@@ -367,6 +429,40 @@ def _measure(fn, x, *, repeats: int, warmup: int = 1) -> float:
         jax.block_until_ready(fn(x))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts)) * 1e6
+
+
+# Retry policy for candidate measurement (DESIGN.md §11): transient
+# launch/measurement failures get _MEASURE_ATTEMPTS total tries with
+# exponential backoff from _MEASURE_BASE_DELAY seconds; a candidate
+# that exhausts them is reported on ``AutotuneResult.failed`` and
+# (via plan_for/shard_plan_for) lands in the store's per-signature
+# denylist so later tuning runs skip it outright.
+_MEASURE_ATTEMPTS = 3
+_MEASURE_BASE_DELAY = 0.02
+
+
+def _measure_candidate(fn, x, label: str, *, repeats: int,
+                       warmup: int = 1) -> tuple[float | None, str | None]:
+    """One candidate's guarded measurement: bounded retry with
+    exponential backoff, then (None, error-string) — the caller
+    denylists, never silently swallows."""
+    try:
+        us = guard.with_retries(
+            lambda: _measure(fn, x, repeats=repeats, warmup=warmup),
+            site=f"autotune.measure[{label}]",
+            attempts=_MEASURE_ATTEMPTS,
+            base_delay=_MEASURE_BASE_DELAY,
+        )
+        return us, None
+    except Exception as e:  # terminal after retries: report, denylist
+        warnings.warn(
+            f"autotune candidate {label!r} failed to measure after "
+            f"{_MEASURE_ATTEMPTS} attempts ({type(e).__name__}: {e}); "
+            f"excluded from this run and denylisted for the signature",
+            guard.DegradationWarning,
+            stacklevel=2,
+        )
+        return None, f"{type(e).__name__}: {e}"
 
 
 def _sample_input(length: int, dtype, rows: int, seed: int):
@@ -404,6 +500,7 @@ def autotune(
     measure_budget: int | None = 5,
     priors: cost_model.Priors | None = None,
     seed_cfgs: tuple[SortConfig, ...] = (),
+    denylist: frozenset[str] = frozenset(),
 ) -> AutotuneResult:
     """Budgeted search: score every candidate's plan with the analytic
     cost model, time only the ``measure_budget`` cheapest-predicted
@@ -420,10 +517,16 @@ def autotune(
             FORCED into the measured set (the cross-shape transfer
             path of :func:`plan_for` passes the nearest cached
             winner's config here).
+        denylist: candidate labels never to measure (persisted failures
+            from earlier runs at this signature — see :func:`plan_for`).
 
     Data is deterministic (seeded uniform keys of the target dtype), so
     back-to-back runs rank candidates consistently up to timer noise;
     ties on predicted cost break toward the lower candidate index.
+    Candidates whose measurement exhausts the retry chain are reported
+    on ``result.failed`` (and excluded from the winner), never silently
+    swallowed.  Raises :class:`guard.SortRuntimeError` when NO candidate
+    measures successfully.
     """
     from repro.core import bucket_sort
 
@@ -453,24 +556,33 @@ def autotune(
         plans.append(plan)
         try:
             predicted.append(cost_model.estimate(plan, priors=priors).total)
-        except Exception:
+        except Exception as e:  # score as worst — never silently
+            warnings.warn(
+                f"cost model failed for candidate {cand.label!r} "
+                f"({type(e).__name__}: {e}); scoring as +inf",
+                guard.DegradationWarning, stacklevel=2)
             predicted.append(float("inf"))
 
     measured = set(_select_measured(predicted, measure_budget, mandatory))
+    skipped = tuple(
+        c.label for i, c in enumerate(cands)
+        if i in measured and c.label in denylist
+    )
+    measured -= {i for i, c in enumerate(cands) if c.label in denylist}
     trials: list[TrialResult] = []
     scores: list[CandidateScore] = []
+    failed: list[tuple[str, str]] = []
     best_plan, best_label = None, ""
     best_us, default_us = float("inf"), float("inf")
     for i, cand in enumerate(cands):
         us = None
         if i in measured:
-            try:
-                us = _measure(
-                    lambda a, p=plans[i]: bucket_sort.sort_planned(a, p),
-                    xj, repeats=repeats, warmup=warmup,
-                )
-            except Exception:  # candidate may be unrunnable here
-                us = None
+            us, err = _measure_candidate(
+                lambda a, p=plans[i]: bucket_sort.sort_planned(a, p),
+                xj, cand.label, repeats=repeats, warmup=warmup,
+            )
+            if err is not None:
+                failed.append((cand.label, err))
         scores.append(CandidateScore(
             index=i, label=cand.label, predicted=predicted[i],
             us_per_call=us,
@@ -482,7 +594,11 @@ def autotune(
             default_us = us
         if us < best_us:
             best_plan, best_label, best_us = plans[i], cand.label, us
-    assert best_plan is not None, "no autotune candidate ran"
+    if best_plan is None:
+        raise guard.SortRuntimeError(
+            "autotune.measure", "at least one candidate measured",
+            f"all {len(measured)} measured candidate(s) failed "
+            f"({len(skipped)} denylisted) for length={length} rows={rows}")
     return AutotuneResult(
         best_plan=best_plan,
         best_label=best_label,
@@ -491,6 +607,8 @@ def autotune(
         trials=tuple(trials),
         candidates=tuple(scores),
         measure_budget=measure_budget,
+        failed=tuple(failed),
+        skipped=skipped,
     )
 
 
@@ -633,11 +751,16 @@ def plan_for(
                 budget = min(measure_budget, 2)
                 transfer_from = near[1]
 
+    deny = store.get("denylist", {}).get(key, {})
     result = autotune(
         length, dtype, cfg, rows=rows, pad_rows=pad_rows,
         max_trials=max_trials, repeats=repeats,
         measure_budget=budget, priors=priors, seed_cfgs=seed_cfgs,
+        denylist=frozenset(deny),
     )
+    if result.failed:
+        store.setdefault("denylist", {}).setdefault(key, {}).update(
+            dict(result.failed))
     store["plans"][key] = dict(
         plan=plan_to_dict(result.best_plan),
         best_us=round(result.best_us, 1),
@@ -651,7 +774,7 @@ def plan_for(
         candidates=len(result.candidates),
         **({"transfer_from": transfer_from} if transfer_from else {}),
     )
-    _save_store(path, store)
+    _persist_store(path, store)
     _MEMO[key] = result.best_plan
     return result.best_plan
 
@@ -754,6 +877,7 @@ def autotune_shard(
     measure_budget: int | None = 5,
     priors: cost_model.Priors | None = None,
     seed_candidates: tuple[ShardCandidate, ...] = (),
+    denylist: frozenset[str] = frozenset(),
 ) -> AutotuneResult:
     """Budgeted search over the distributed schedule space: score each
     candidate's :class:`ShardPlan` analytically (including the
@@ -803,26 +927,35 @@ def autotune_shard(
         plans.append(plan)
         try:
             predicted.append(cost_model.estimate(plan, priors=priors).total)
-        except Exception:
+        except Exception as e:  # score as worst — never silently
+            warnings.warn(
+                f"cost model failed for distributed candidate "
+                f"{cand.label!r} ({type(e).__name__}: {e}); scoring as +inf",
+                guard.DegradationWarning, stacklevel=2)
             predicted.append(float("inf"))
 
     measured = set(_select_measured(predicted, measure_budget, mandatory))
+    skipped = tuple(
+        c.label for i, c in enumerate(space)
+        if i in measured and c.label in denylist
+    )
+    measured -= {i for i, c in enumerate(space) if c.label in denylist}
     trials: list[TrialResult] = []
     scores: list[CandidateScore] = []
+    failed: list[tuple[str, str]] = []
     best_plan, best_label = None, ""
     best_us, default_us = float("inf"), float("inf")
     for i, cand in enumerate(space):
         us = None
         if i in measured:
-            try:
-                us = _measure(
-                    lambda a, p=plans[i]: distributed_sort._sharded_argsort(
-                        a, mesh, p
-                    ),
-                    xj, repeats=repeats, warmup=warmup,
-                )
-            except Exception:  # candidate may be unrunnable here
-                us = None
+            us, err = _measure_candidate(
+                lambda a, p=plans[i]: distributed_sort._sharded_argsort(
+                    a, mesh, p
+                ),
+                xj, cand.label, repeats=repeats, warmup=warmup,
+            )
+            if err is not None:
+                failed.append((cand.label, err))
         scores.append(CandidateScore(
             index=i, label=cand.label, predicted=predicted[i],
             us_per_call=us,
@@ -834,7 +967,12 @@ def autotune_shard(
             default_us = us
         if us < best_us:
             best_plan, best_label, best_us = plans[i], cand.label, us
-    assert best_plan is not None, "no distributed autotune candidate ran"
+    if best_plan is None:
+        raise guard.SortRuntimeError(
+            "autotune.measure", "at least one candidate measured",
+            f"all {len(measured)} measured distributed candidate(s) "
+            f"failed ({len(skipped)} denylisted) for n_global={n_global} "
+            f"D={d}")
     return AutotuneResult(
         best_plan=best_plan,
         best_label=best_label,
@@ -843,6 +981,8 @@ def autotune_shard(
         trials=tuple(trials),
         candidates=tuple(scores),
         measure_budget=measure_budget,
+        failed=tuple(failed),
+        skipped=skipped,
     )
 
 
@@ -967,12 +1107,17 @@ def shard_plan_for(
                 budget = min(measure_budget, 2)
                 transfer_from = near[1]
 
+    deny = store.get("denylist", {}).get(key, {})
     result = autotune_shard(
         mesh, axt, n_global, dtype, cfg,
         oversample=oversample, pair_align=pair_align,
         max_trials=max_trials, repeats=repeats,
         measure_budget=budget, priors=priors, seed_candidates=seeds,
+        denylist=frozenset(deny),
     )
+    if result.failed:
+        store.setdefault("denylist", {}).setdefault(key, {}).update(
+            dict(result.failed))
     store["plans"][key] = dict(
         plan=shard_plan_to_dict(result.best_plan),
         best_us=round(result.best_us, 1),
@@ -986,7 +1131,7 @@ def shard_plan_for(
         candidates=len(result.candidates),
         **({"transfer_from": transfer_from} if transfer_from else {}),
     )
-    _save_store(path, store)
+    _persist_store(path, store)
     _SHARD_MEMO[key] = result.best_plan
     return result.best_plan
 

@@ -110,6 +110,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import guard
 from repro.core import plan as plan_mod
 from repro.core.key_codec import codec_for
 from repro.core.plan import LevelPlan, SortPlan, build_plan
@@ -508,16 +509,113 @@ def resolve_plan(length: int, dtype, cfg: SortConfig, *, rows: int = 1,
     )
 
 
-def _sort_canonical_rows(kw, plan: SortPlan, with_stats: bool = False):
+@jax.jit
+def _reference_sort_packed(kw, vals):
+    """Last chain link of the degradation ladder (DESIGN.md §11): one
+    ``jax.lax.sort`` over (key words..., payload) — no pallas, no plan
+    machinery, the same formulation as ``baselines.xla_sort``.  Correct
+    for any canonical input; slower (no tiling, no fused steps)."""
+    out = jax.lax.sort(tuple(kw) + (vals,), dimension=1,
+                       num_keys=len(kw) + 1)
+    return tuple(out[:-1]), out[-1]
+
+
+def _fallback_plan(plan: SortPlan) -> SortPlan | None:
+    """Stage-2 degradation target: a default-config xla stand-in plan
+    for the same (rows, length) canonical-words signature.  ``None``
+    when it would equal the failing plan (nothing left to vary before
+    the reference path)."""
+    try:
+        alt = plan_mod.build_words_plan(
+            plan.length, plan.num_words,
+            SortConfig(impl="xla", interpret=False),
+            rows=plan.rows_padded,
+        )
+    except Exception:
+        return None
+    return None if alt == plan else alt
+
+
+def _execute_packed(kw, vals, plan: SortPlan, pad_base0: int, *,
+                    check: str = "off", degrade: bool = True,
+                    with_stats: bool = False):
+    """Guarded, degrading funnel every packed entry point runs through.
+
+    Executes ``plan`` via the jit'd canonical entry, then applies the
+    ``check`` invariants (``core/guard.py``): ``'bounds'`` verifies the
+    paper's capacity bound on the measured bucket fills of each round,
+    ``'full'`` adds permutation checksums + sortedness on the output.
+
+    With ``degrade=True`` any failure — kernel launch error, injected
+    fault (``core/faults.py``), or a check violation — walks the
+    degradation chain (DESIGN.md §11):
+
+      1. the resolved plan as given;
+      2. a default-config ``impl='xla'`` stand-in plan (fresh trace —
+         failed traces are never cached, so a transient launch fault
+         does not poison the chain);
+      3. the ``jax.lax.sort`` reference (no plan machinery at all).
+
+    Each step re-runs the checks; events land in
+    ``guard.degradation_log()``.  ``degrade=False`` (the explicit-plan
+    API) propagates the structured error instead.  Returns
+    (kw, vals[, stats]); a run degraded to the reference path reports
+    ``stats == []`` (the reference has no bucket rounds).
+    """
+    guard.validate_check(check)
+    want_stats = with_stats or check != "off"
+
+    def run(p: SortPlan):
+        out = _sort_canonical_packed(kw, vals, p, pad_base0, want_stats)
+        skw, sv, stats = out if want_stats else (out[0], out[1], [])
+        if check != "off":
+            guard.check_bounds(p, stats)
+        if check == "full":
+            guard.check_full(p, kw, vals, skw, sv)
+        return skw, sv, stats
+
+    try:
+        skw, sv, stats = run(plan)
+    except Exception as e1:
+        if not degrade:
+            raise
+        alt = _fallback_plan(plan)
+        skw = None
+        if alt is not None:
+            guard.record_degradation(
+                guard.plan_site(plan), "fallback", f"impl={plan.impl} plan",
+                "default xla stand-in plan", e1)
+            try:
+                skw, sv, stats = run(alt)
+            except Exception as e2:
+                e1 = e2
+        if skw is None:
+            guard.record_degradation(
+                guard.plan_site(plan), "fallback",
+                "plan execution", "jax.lax.sort reference", e1)
+            skw, sv = _reference_sort_packed(kw, vals)
+            stats = []
+            if check == "full":
+                guard.check_full(plan, kw, vals, skw, sv)
+    if with_stats:
+        return skw, sv, stats
+    return skw, sv
+
+
+def _sort_canonical_rows(kw, plan: SortPlan, with_stats: bool = False,
+                         check: str = "off"):
     """(B, L) canonical sort with payload = original index within the row."""
     b, n = kw[0].shape
     vals = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
-    return _sort_canonical_packed(kw, vals, plan, n, with_stats)
+    return _execute_packed(kw, vals, plan, n, check=check,
+                           with_stats=with_stats)
 
 
-def _sort_canonical(kw, plan: SortPlan, with_stats: bool = False):
+def _sort_canonical(kw, plan: SortPlan, with_stats: bool = False,
+                    check: str = "off"):
     """1-D canonical entry (single logical row of the batched path)."""
-    out = _sort_canonical_rows(tuple(w[None, :] for w in kw), plan, with_stats)
+    out = _sort_canonical_rows(tuple(w[None, :] for w in kw), plan,
+                               with_stats, check)
     skw = tuple(w[0] for w in out[0])
     if with_stats:
         return skw, out[1][0], out[2]
@@ -574,7 +672,7 @@ def sort(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
         return keys
     codec = codec_for(keys.dtype, cfg.descending)
     plan = resolve_plan(keys.shape[0], keys.dtype, cfg)
-    su, _ = _sort_canonical(codec.encode(keys), plan)
+    su, _ = _sort_canonical(codec.encode(keys), plan, check=cfg.check)
     return codec.decode(su)
 
 
@@ -600,7 +698,7 @@ def argsort(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array:
         return jnp.arange(keys.shape[0], dtype=jnp.int32)
     codec = codec_for(keys.dtype, cfg.descending)
     plan = resolve_plan(keys.shape[0], keys.dtype, cfg)
-    _, perm = _sort_canonical(codec.encode(keys), plan)
+    _, perm = _sort_canonical(codec.encode(keys), plan, check=cfg.check)
     return perm
 
 
@@ -620,7 +718,7 @@ def sort_kv(keys: jax.Array, values: jax.Array, cfg: SortConfig = DEFAULT_CONFIG
         return keys, values
     codec = codec_for(keys.dtype, cfg.descending)
     plan = resolve_plan(n, keys.dtype, cfg)
-    su, perm = _sort_canonical(codec.encode(keys), plan)
+    su, perm = _sort_canonical(codec.encode(keys), plan, check=cfg.check)
     return codec.decode(su), jnp.take(values, perm, axis=0)
 
 
@@ -642,12 +740,13 @@ def sort_with_stats(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
     codec = codec_for(keys.dtype, cfg.descending)
     plan = resolve_plan(n, keys.dtype, cfg)
     su, perm, stats = _sort_canonical(
-        codec.encode(keys), plan, with_stats=True
+        codec.encode(keys), plan, with_stats=True, check=cfg.check
     )
     return codec.decode(su), perm, stats
 
 
-def sort_planned(keys: jax.Array, plan: SortPlan) -> jax.Array:
+def sort_planned(keys: jax.Array, plan: SortPlan,
+                 check: str = "off") -> jax.Array:
     """Sort with an EXPLICIT :class:`~repro.core.plan.SortPlan`.
 
     The autotuner's measurement entry and the zero-retrace serving
@@ -655,16 +754,26 @@ def sort_planned(keys: jax.Array, plan: SortPlan) -> jax.Array:
     an equal plan (the memoized builder object, or one reloaded from
     the persistent cache) reuses one compiled executable.
 
+    Unlike the config-driven entries, an explicit plan is executed
+    WITHOUT degradation (``degrade=False``): the caller asked for this
+    exact schedule, so a failure — including a ``check`` invariant
+    violation (:class:`repro.core.guard.SortRuntimeError`) — raises
+    rather than silently substituting a different plan.
+
     Args:
         keys: 1-D (plan.rows == 1) or 2-D (B, L) array whose
             shape/dtype match the plan signature.
         plan: a plan from :func:`repro.core.plan.build_plan`,
             ``autotune.plan_for``, or ``autotune.load_plan``.
+        check: runtime invariant mode, ``'off' | 'bounds' | 'full'``
+            (see DESIGN.md §11).
     Returns:
         Sorted array of keys' shape/dtype (each row independently for
         2-D), descending iff the plan was built from a descending cfg.
     Raises:
         ValueError: when keys' shape or dtype do not match the plan.
+        repro.core.guard.SortRuntimeError: when ``check`` detects an
+            invariant violation for this plan.
     """
     shape = (
         (1, keys.shape[0]) if keys.ndim == 1
@@ -682,13 +791,20 @@ def sort_planned(keys: jax.Array, plan: SortPlan) -> jax.Array:
         return keys
     codec = codec_for(keys.dtype, plan.descending)
     if keys.ndim == 1:
-        su, _ = _sort_canonical(codec.encode(keys), plan)
-        return codec.decode(su)
+        kw1 = tuple(w[None, :] for w in codec.encode(keys))
+        vals = jnp.broadcast_to(
+            jnp.arange(plan.length, dtype=jnp.int32)[None, :],
+            (1, plan.length),
+        )
+        sk, _ = _execute_packed(kw1, vals, plan, plan.length,
+                                check=check, degrade=False)
+        return codec.decode(tuple(w[0] for w in sk))
     vals = jnp.broadcast_to(
         jnp.arange(plan.length, dtype=jnp.int32)[None, :], keys.shape
     )
     kw, vals = _pad_rows(codec.encode(keys), vals, plan)
-    sk, _ = _sort_canonical_packed(kw, vals, plan, plan.length)
+    sk, _ = _execute_packed(kw, vals, plan, plan.length,
+                            check=check, degrade=False)
     return codec.decode(tuple(w[:plan.rows] for w in sk))
 
 
@@ -731,7 +847,7 @@ def sort_batched(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG) -> jax.Array
     if b == 0 or length <= 1:
         return keys
     codec, plan, kw, vals, b = _batched_entry(keys, cfg)
-    sk, _ = _sort_canonical_packed(kw, vals, plan, length)
+    sk, _ = _execute_packed(kw, vals, plan, length, check=cfg.check)
     return codec.decode(tuple(w[:b] for w in sk))
 
 
@@ -751,7 +867,7 @@ def argsort_batched(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
             jnp.arange(length, dtype=jnp.int32)[None, :], (b, length)
         )
     _, plan, kw, vals, b = _batched_entry(keys, cfg)
-    _, perm = _sort_canonical_packed(kw, vals, plan, length)
+    _, perm = _execute_packed(kw, vals, plan, length, check=cfg.check)
     return perm[:b]
 
 
@@ -773,7 +889,7 @@ def sort_kv_batched(keys: jax.Array, values: jax.Array,
     if b == 0 or length <= 1:
         return keys, values
     codec, plan, kw, vals, b = _batched_entry(keys, cfg)
-    sk, perm = _sort_canonical_packed(kw, vals, plan, length)
+    sk, perm = _execute_packed(kw, vals, plan, length, check=cfg.check)
     sk, perm = tuple(w[:b] for w in sk), perm[:b]
     idx = perm.reshape(perm.shape + (1,) * (values.ndim - 2))
     sv = jnp.take_along_axis(values, idx, axis=1)
@@ -796,8 +912,8 @@ def sort_batched_with_stats(keys: jax.Array, cfg: SortConfig = DEFAULT_CONFIG):
         )
         return keys, perm, []
     codec, plan, kw, vals, b = _batched_entry(keys, cfg)
-    sk, perm, stats = _sort_canonical_packed(
-        kw, vals, plan, length, with_stats=True
+    sk, perm, stats = _execute_packed(
+        kw, vals, plan, length, with_stats=True, check=cfg.check
     )
     return codec.decode(tuple(w[:b] for w in sk)), perm[:b], stats
 
@@ -863,7 +979,7 @@ def _segment_sorted_packed(x: jax.Array, segment_offsets, cfg: SortConfig):
         max(w, 1), x.dtype, cfg, rows=s_orig, pad_rows=True
     )
     pkw, pv = _pad_rows(pkw, pv, plan)
-    skw, sv = _sort_canonical_packed(pkw, pv, plan, 2 * max(w, 1))
+    skw, sv = _execute_packed(pkw, pv, plan, 2 * max(w, 1), check=cfg.check)
     return codec, tuple(u[:s_orig] for u in skw), sv[:s_orig], layout
 
 

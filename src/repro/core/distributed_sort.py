@@ -62,6 +62,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import faults, guard
 from repro.core.bucket_sort import _run_node
 from repro.core.key_codec import codec_for
 from repro.core.plan import ShardPlan, SortPlan, build_shard_plan, shard_geometry
@@ -253,6 +254,7 @@ def sorted_shard(keys_local, vals_local: jax.Array, plan: ShardPlan):
     ).at[dest].set(v, mode="drop")
     pad_base += d * d * c_pair
 
+    faults.check("collective.exchange")  # trace-time chaos site (§11)
     bkw = tuple(
         jax.lax.all_to_all(
             w.reshape(d, c_pair), ax, split_axis=0, concat_axis=0, tiled=False
@@ -323,6 +325,47 @@ def _sharded_argsort(keys, mesh, plan: ShardPlan):
     # fkw: (D, nw, out_cap) -> per-word (D*out_cap,) flats -> decode
     words = tuple(fkw[:, i, :].reshape(-1) for i in range(codec.num_words))
     return codec.decode(words), fv.reshape(-1), counts, mw
+
+
+def _degraded_host_sort(keys, plan: ShardPlan):
+    """Last link of the distributed degradation chain (DESIGN.md §11):
+    gather the whole array to the host, sort it on one device with a
+    single stable ``lax.sort`` over the canonical words + global-index
+    payload, and re-emit the distributed output contract — per-shard
+    ``out_cap`` chunks whose valid prefixes (``counts[i] == n_local``)
+    concatenate to the globally sorted sequence.
+
+    Deterministic and bitwise-equal to the mesh path on the valid
+    prefixes; slower (no parallelism) and returns unsharded arrays.
+    ``max_within`` is reported as 0 (no exchange ran)."""
+    import numpy as np
+
+    codec = codec_for(plan.dtype_name, plan.descending)
+    n = plan.d * plan.n_local
+    x = jnp.asarray(np.asarray(jax.device_get(keys)))
+    kw = as_words(codec.encode(x))
+    gid = jnp.arange(n, dtype=jnp.int32)
+    out = jax.lax.sort(tuple(kw) + (gid,), num_keys=len(kw) + 1)
+    sk = codec.decode(tuple(out[:-1]))
+    sv = np.asarray(out[-1])
+    skn = np.asarray(sk)
+    d, oc, n_loc = plan.d, plan.out_cap, plan.n_local
+    out_k = np.zeros((d, oc), dtype=skn.dtype)
+    out_v = np.full((d, oc), np.int32(2**31 - 1), np.int32)
+    for i in range(d):
+        chunk = skn[i * n_loc:(i + 1) * n_loc]
+        out_k[i, :n_loc] = chunk
+        if n_loc and oc > n_loc:
+            out_k[i, n_loc:] = chunk[-1]  # inert pad content
+        out_v[i, :n_loc] = sv[i * n_loc:(i + 1) * n_loc]
+    counts = np.full((d,), n_loc, np.int32)
+    mw = np.zeros((d,), np.int32)
+    return (
+        jnp.asarray(out_k.reshape(-1)),
+        jnp.asarray(out_v.reshape(-1)),
+        jnp.asarray(counts),
+        jnp.asarray(mw),
+    )
 
 
 def _axis_degree(mesh, axis) -> tuple[tuple[str, ...], int]:
@@ -421,6 +464,29 @@ def make_sharded_sort(
                 f"the shard plan's dtype {plan.dtype_name} (pass dtype= to "
                 "make_sharded_sort)"
             )
-        return _sharded_argsort(keys, mesh, plan)
+        # Degradation chain (DESIGN.md §11): mesh execution -> ONE retry
+        # (a failed trace is never cached, so the retry re-traces from
+        # scratch) -> deterministic gather-to-host degraded sort.  The
+        # outcome is recorded on ``run.last_stats``.
+        site = f"collective.exchange[D={plan.d}]"
+        try:
+            out = _sharded_argsort(keys, mesh, plan)
+            run.last_stats = {"degraded": False, "retries": 0}
+            return out
+        except Exception as e1:
+            guard.record_degradation(
+                site, "retry", "mesh execution", "mesh execution (retry)", e1)
+        try:
+            out = _sharded_argsort(keys, mesh, plan)
+            run.last_stats = {"degraded": False, "retries": 1}
+            return out
+        except Exception as e2:
+            guard.record_degradation(
+                site, "fallback", "mesh execution",
+                "gather-to-host degraded sort", e2)
+        out = _degraded_host_sort(keys, plan)
+        run.last_stats = {"degraded": True, "retries": 1}
+        return out
 
+    run.last_stats = {"degraded": False, "retries": 0}
     return run, plan

@@ -37,6 +37,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import guard
 from repro.core.bucket_sort import _chunk_search
 from repro.core.key_codec import codec_for
 from repro.core.plan import TopkPlan, build_topk_plan
@@ -151,6 +152,32 @@ def _smallest_k(kw, tplan: TopkPlan):
     return tuple(w[:k] for w in fkw), fv[:k]
 
 
+def _fallback_topk_plan(n, k, dtype, tplan: TopkPlan, rows: int = 1):
+    """Default-config xla stand-in plan for the degradation chain
+    (DESIGN.md §11), or None when indistinguishable from ``tplan``."""
+    try:
+        alt = build_topk_plan(
+            n, k, dtype, SortConfig(impl="xla", interpret=False), rows=rows
+        )
+    except Exception:
+        return None
+    return None if alt == tplan else alt
+
+
+def _topk_site(tplan: TopkPlan) -> str:
+    return (f"TopkPlan(rows={tplan.rows}, n={tplan.length}, "
+            f"k={tplan.k}, impl={tplan.impl})")
+
+
+def _reference_topk(x, k, codec, check):
+    """Last rung of the chain: jax.lax.top_k (no plan machinery)."""
+    v, i = jax.lax.top_k(x, k)
+    i = i.astype(jnp.int32)
+    if check != "off":
+        guard.check_topk(x, v, i, k, check, codec)
+    return v, i
+
+
 def topk(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
     """Top-k (descending) values + original indices of 1-D x.
 
@@ -159,7 +186,8 @@ def topk(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
             bool; 64-bit needs x64 mode — see ``core/key_codec``).
         k: 1 <= k <= len(x).
         cfg: pipeline knobs (``cfg.descending`` is ignored: top-k is
-            descending by definition).
+            descending by definition; ``cfg.check`` enables runtime
+            invariants and the degradation chain of DESIGN.md §11).
     Returns:
         (values (k,) in x.dtype, indices (k,) int32); ties break toward
         the smaller index (matches jax.lax.top_k).
@@ -173,15 +201,39 @@ def topk(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
     """
     n = x.shape[0]
     assert 1 <= k <= n
+    guard.validate_check(cfg.check)
     codec = codec_for(x.dtype, descending=True)
-    tplan = build_topk_plan(n, k, x.dtype, cfg)
     kw = codec.encode(x)  # ascending canonical == descending score
-    if n <= tplan.direct_max:
-        fkw, fv = _sort_small(kw, jnp.arange(n, dtype=jnp.int32), tplan)
-        fkw, fv = tuple(w[:k] for w in fkw), fv[:k]
-    else:
-        fkw, fv = _smallest_k(kw, tplan)
-    return codec.decode(fkw), fv
+
+    def run(tplan):
+        if n <= tplan.direct_max:
+            fkw, fv = _sort_small(kw, jnp.arange(n, dtype=jnp.int32), tplan)
+            fkw, fv = tuple(w[:k] for w in fkw), fv[:k]
+        else:
+            fkw, fv = _smallest_k(kw, tplan)
+        v, i = codec.decode(fkw), fv
+        if cfg.check != "off":
+            guard.check_topk(x, v, i, k, cfg.check, codec)
+        return v, i
+
+    tplan = build_topk_plan(n, k, x.dtype, cfg)
+    try:
+        return run(tplan)
+    except Exception as e1:
+        alt = _fallback_topk_plan(n, k, x.dtype, tplan)
+        if alt is not None:
+            guard.record_degradation(
+                _topk_site(tplan), "fallback",
+                f"impl={tplan.impl} topk plan", "default xla stand-in plan",
+                e1)
+            try:
+                return run(alt)
+            except Exception as e2:
+                e1 = e2
+        guard.record_degradation(
+            _topk_site(tplan), "fallback",
+            "partial-sort top-k", "jax.lax.top_k reference", e1)
+        return _reference_topk(x, k, codec, cfg.check)
 
 
 # ----------------------------------------------------------------------
@@ -292,7 +344,8 @@ def topk_batched(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
     Args:
         x: (B, C) scores in any codec dtype (see :func:`topk`).
         k: 1 <= k <= C.
-        cfg: pipeline knobs (``descending`` ignored, see :func:`topk`).
+        cfg: pipeline knobs (``descending`` ignored, see :func:`topk`;
+            ``cfg.check`` enables runtime invariants + degradation).
     Returns:
         (values (B, k) in x.dtype, indices (B, k) int32).
     """
@@ -301,13 +354,39 @@ def topk_batched(x: jax.Array, k: int, cfg: SortConfig = DEFAULT_CONFIG):
     assert 1 <= k <= n
     if b == 0:
         return (jnp.zeros((0, k), x.dtype), jnp.zeros((0, k), jnp.int32))
+    guard.validate_check(cfg.check)
     codec = codec_for(x.dtype, descending=True)
-    tplan = build_topk_plan(n, k, x.dtype, cfg, rows=b)
     kw = codec.encode(x)  # ascending canonical == descending score
-    if n <= tplan.direct_max:
-        vals = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
-        fkw, fv = _sort_small_rows(kw, vals, tplan)
-        fkw, fv = tuple(w[:, :k] for w in fkw), fv[:, :k]
-    else:
-        fkw, fv = _smallest_k_rows(kw, tplan)
-    return codec.decode(fkw), fv
+
+    def run(tplan):
+        if n <= tplan.direct_max:
+            vals = jnp.broadcast_to(
+                jnp.arange(n, dtype=jnp.int32)[None, :], (b, n)
+            )
+            fkw, fv = _sort_small_rows(kw, vals, tplan)
+            fkw, fv = tuple(w[:, :k] for w in fkw), fv[:, :k]
+        else:
+            fkw, fv = _smallest_k_rows(kw, tplan)
+        v, i = codec.decode(fkw), fv
+        if cfg.check != "off":
+            guard.check_topk(x, v, i, k, cfg.check, codec)
+        return v, i
+
+    tplan = build_topk_plan(n, k, x.dtype, cfg, rows=b)
+    try:
+        return run(tplan)
+    except Exception as e1:
+        alt = _fallback_topk_plan(n, k, x.dtype, tplan, rows=b)
+        if alt is not None:
+            guard.record_degradation(
+                _topk_site(tplan), "fallback",
+                f"impl={tplan.impl} topk plan", "default xla stand-in plan",
+                e1)
+            try:
+                return run(alt)
+            except Exception as e2:
+                e1 = e2
+        guard.record_degradation(
+            _topk_site(tplan), "fallback",
+            "partial-sort top-k", "jax.lax.top_k reference", e1)
+        return _reference_topk(x, k, codec, cfg.check)

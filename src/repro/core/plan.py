@@ -224,15 +224,19 @@ class SortPlan:
 
 
 def config_fingerprint(cfg: SortConfig) -> str:
-    """Stable hash of every SortConfig field except ``plan`` itself.
+    """Stable hash of every SortConfig field except ``plan`` and ``check``.
 
     The ``plan`` field selects HOW a plan is obtained (default /
     autotune / file); it must not perturb the identity of the plans the
     cache is keyed by, or a cached plan could never match the config
-    that requests it.
+    that requests it.  ``check`` is a call-time verification knob
+    (``core/guard.py``) that never changes the schedule: excluding it
+    keeps checked and unchecked runs on the same cache entries (and
+    keeps fingerprints stable across the field's introduction).
     """
     d = dataclasses.asdict(cfg)
     d.pop("plan", None)
+    d.pop("check", None)
     blob = json.dumps(d, sort_keys=True, default=str)
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 

@@ -102,6 +102,18 @@ class SortConfig:
         applied on the pallas path (it is pure overhead for the xla
         reference path); 1 disables.  Pad rows are all-pad (MAXU keys),
         obey the same capacity bound, and are sliced off on exit.
+    check: runtime invariant checking (``core/guard.py``, DESIGN.md
+        §11).  ``"off"`` (default) runs unguarded.  ``"bounds"``
+        verifies the paper's deterministic capacity invariant on every
+        bucket round of every call — no bucket fill exceeds the static
+        ``cap`` (so relocation dropped nothing and ``within < cap``)
+        and per-row fills conserve the padded row length.  ``"full"``
+        adds output post-conditions: permutation checksums (payloads
+        and key words, input vs output) and canonical-word sortedness.
+        Violations raise ``guard.SortRuntimeError`` naming the plan
+        node and invariant.  A call-time knob: it is EXCLUDED from the
+        config fingerprint (``plan.config_fingerprint``), so checked
+        and unchecked runs share plan-cache entries.
     """
 
     tile: int = 4096
@@ -119,6 +131,7 @@ class SortConfig:
     strategy: str = "bitonic"
     radix_bits: int = 4
     merge_run: int = 512
+    check: str = "off"
 
     def __post_init__(self):
         # Field-by-field validation with errors that NAME the offending
@@ -176,6 +189,11 @@ class SortConfig:
             raise ValueError(
                 'SortConfig.plan must be "default", "autotune", or a '
                 f"plan-file path, got {self.plan!r}"
+            )
+        if self.check not in ("off", "bounds", "full"):
+            raise ValueError(
+                'SortConfig.check must be "off", "bounds" or "full", '
+                f"got {self.check!r}"
             )
 
 

@@ -5,7 +5,12 @@ Production properties:
     step, shard), so restart-from-checkpoint replays the exact stream
     (no state files needed);
   * per-host sharding — each process reads only its data-parallel slice;
-  * background prefetch — a double-buffered thread hides host latency.
+  * background prefetch — a double-buffered thread hides host latency;
+  * fail-loud producer (DESIGN.md §11) — an exception in the prefetch
+    thread is surfaced to the consumer as a structured
+    :class:`ProducerError` on the next ``__next__`` (batches already
+    prefetched before the failure are still delivered, in order), never
+    a silent hang; ``close()`` is a deterministic, idempotent join.
 """
 
 from __future__ import annotations
@@ -14,6 +19,28 @@ import queue
 import threading
 
 import numpy as np
+
+from repro.core import faults
+
+
+class ProducerError(RuntimeError):
+    """The DataLoader's prefetch thread died; raised to the consumer.
+
+    Attributes:
+        site: the fault-site name (``"pipeline.producer"``).
+        step: the dataset step the producer failed at.
+
+    The original exception is chained as ``__cause__``.
+    """
+
+    site = "pipeline.producer"
+
+    def __init__(self, step: int, cause: BaseException):
+        super().__init__(
+            f"data pipeline producer failed at step {step} "
+            f"(site {self.site}): {type(cause).__name__}: {cause}"
+        )
+        self.step = step
 
 
 class SyntheticDataset:
@@ -68,33 +95,83 @@ class MemmapDataset:
 
 
 class DataLoader:
-    """Background-prefetching iterator over a seekable dataset."""
+    """Background-prefetching iterator over a seekable dataset.
+
+    Producer failures propagate: if the prefetch thread raises, the
+    already-queued batches are still delivered in order, then the next
+    ``__next__`` raises :class:`ProducerError` (original exception
+    chained) instead of blocking forever.  ``close()`` drains the queue
+    so a blocked producer observes the stop promptly, joins the thread,
+    and is idempotent; iterating a closed loader raises StopIteration.
+    """
+
+    _SENTINEL = object()  # queued after a producer error/stop: wake consumer
 
     def __init__(self, dataset, start_step: int = 0, prefetch: int = 2):
         self.dataset = dataset
         self.step = start_step
-        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self.error: ProducerError | None = None
+        self._q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1) + 1)
         self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread = threading.Thread(
+            target=self._worker, daemon=True, name="DataLoader-producer"
+        )
         self._thread.start()
 
     def _worker(self):
         s = self.step
-        while not self._stop.is_set():
-            try:
-                self._q.put((s, self.dataset.batch_at(s)), timeout=0.2)
+        try:
+            while not self._stop.is_set():
+                faults.check("pipeline.producer")
+                item = (s, self.dataset.batch_at(s))
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
                 s += 1
+        except Exception as e:  # fail loud: surface on next __next__
+            err = ProducerError(s, e)
+            err.__cause__ = e
+            self.error = err
+        finally:
+            # Wake a consumer blocked on get(); maxsize=prefetch+1
+            # guarantees one sentinel slot beyond the prefetch depth.
+            try:
+                self._q.put_nowait(self._SENTINEL)
             except queue.Full:
-                continue
+                pass
 
     def __iter__(self):
         return self
 
     def __next__(self):
-        s, b = self._q.get()
-        self.step = s + 1
-        return b
+        while True:
+            try:
+                item = self._q.get(timeout=0.1)
+            except queue.Empty:
+                if not self._thread.is_alive():
+                    if self.error is not None:
+                        raise self.error
+                    raise StopIteration  # closed/stopped loader
+                continue
+            if item is self._SENTINEL:
+                if self.error is not None:
+                    raise self.error
+                raise StopIteration
+            s, b = item
+            self.step = s + 1
+            return b
 
     def close(self):
+        """Deterministic, idempotent shutdown: signal stop, drain the
+        queue (a producer blocked on a full queue re-checks the stop
+        flag within its put timeout), and join the thread."""
         self._stop.set()
-        self._thread.join(timeout=2)
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5)

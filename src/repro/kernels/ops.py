@@ -21,6 +21,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults
 from repro.core.key_codec import codec_for
 from repro.kernels import bitonic as _bitonic
 from repro.kernels import merge as _merge
@@ -141,6 +142,7 @@ def sort_tiles(
     """
     impl = impl or default_impl()
     _check_strategy(strategy)
+    faults.check("kernel.launch")  # trace-time chaos site (DESIGN.md §11)
     if impl == "pallas":
         interpret = default_interpret() if interpret is None else interpret
         if strategy == "radix":
@@ -187,6 +189,7 @@ def sort_tiles_sample(
     """
     impl = impl or default_impl()
     _check_strategy(strategy)
+    faults.check("kernel.launch")  # trace-time chaos site (DESIGN.md §11)
     if impl == "pallas":
         interpret = default_interpret() if interpret is None else interpret
         if strategy == "radix":

@@ -18,12 +18,17 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def sample_topk(logits, k, temperature, rng_key, cfg):
-    """Per-row top-k sampling via the paper's partial sort (vocab-scale)."""
+def sample_topk(logits, k, temperature, rng_key, cfg, check="off"):
+    """Per-row top-k sampling via the paper's partial sort (vocab-scale).
+
+    ``check`` ('off'|'bounds'|'full') turns on the sort's runtime
+    invariants (DESIGN.md §11) for every sampling step.
+    """
     from repro.core import partial_sort
     from repro.core.sort_config import SortConfig
 
-    scfg = SortConfig(tile=4096, s=64, direct_max=8192, impl="xla")
+    scfg = SortConfig(tile=4096, s=64, direct_max=8192, impl="xla",
+                      check=check)
     if k <= 1 or temperature <= 0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     outs = []
@@ -44,6 +49,11 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--topk", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--check", choices=["off", "bounds", "full"],
+                    default="off",
+                    help="runtime sort invariants for the sampler "
+                         "(DESIGN.md §11): 'bounds' verifies the capacity "
+                         "bound, 'full' adds permutation+order checks")
     args = ap.parse_args()
 
     from repro import configs
@@ -76,13 +86,16 @@ def main():
     t_prefill = time.perf_counter() - t0
 
     key = jax.random.PRNGKey(1)
-    tok = sample_topk(logits, args.topk, args.temperature, key, cfg)[:, None]
+    tok = sample_topk(
+        logits, args.topk, args.temperature, key, cfg, check=args.check
+    )[:, None]
     out_tokens = [tok]
     t0 = time.perf_counter()
     for i in range(args.gen - 1):
         logits, caches = step(params, tok, caches, jnp.int32(s + i))
         tok = sample_topk(
-            logits, args.topk, args.temperature, jax.random.fold_in(key, i), cfg
+            logits, args.topk, args.temperature, jax.random.fold_in(key, i),
+            cfg, check=args.check,
         )[:, None]
         out_tokens.append(tok)
     jax.block_until_ready(tok)

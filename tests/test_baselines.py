@@ -28,7 +28,8 @@ def test_randomized_bucket_variance_exceeds_deterministic(rng):
     fills = []
     for seed in range(5):
         _, _, (maxfill, _) = baselines.randomized_sample_sort(
-            x, jax.random.PRNGKey(seed), CFG, capacity_factor=8.0, with_stats=True
+            x, jax.random.PRNGKey(seed), CFG, capacity_factor=8.0,
+            with_stats=True, max_attempts=1,  # raw mode: observe fills as-is
         )
         fills.append(int(maxfill))
     assert len(set(fills)) > 1, "randomized fills should vary with seed"

@@ -1,0 +1,318 @@
+"""Guarded execution (core/guard.py): checked modes, invariant checks,
+degradation machinery, and the checked-mode end-to-end contract —
+``check='bounds'|'full'`` must be output-invariant on healthy runs and
+raise a structured SortRuntimeError on doctored ones (DESIGN.md §11)."""
+import dataclasses
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune, bucket_sort, faults, guard, partial_sort
+from repro.core.key_codec import codec_for
+from repro.core.plan import build_plan, config_fingerprint
+from repro.core.sort_config import SortConfig
+
+CFG = SortConfig(tile=256, s=16, direct_max=512, impl="xla")
+
+
+@pytest.fixture(autouse=True)
+def _clean_state():
+    faults.reset()
+    guard.clear_degradation_log()
+    yield
+    faults.reset()
+    guard.clear_degradation_log()
+
+
+def _cfg(check="off", **kw):
+    return dataclasses.replace(CFG, check=check, **kw)
+
+
+# ----------------------------------------------------------------------
+# Knob validation + cache identity
+# ----------------------------------------------------------------------
+
+
+def test_check_knob_validated():
+    with pytest.raises(ValueError, match="check"):
+        SortConfig(check="bogus")
+    for mode in guard.CHECK_MODES:
+        SortConfig(check=mode)
+    with pytest.raises(ValueError):
+        guard.validate_check("nope")
+
+
+def test_fingerprint_ignores_check():
+    """Checked and unchecked configs must share plan-cache entries."""
+    assert config_fingerprint(_cfg("off")) == config_fingerprint(_cfg("full"))
+    assert config_fingerprint(_cfg("off")) == config_fingerprint(_cfg("bounds"))
+
+
+def test_invalid_check_rejected_at_entry(rng):
+    x = jnp.asarray(rng.integers(0, 100, 10).astype(np.int32))
+    cfg = dataclasses.replace(CFG)
+    object.__setattr__(cfg, "check", "sideways")  # bypass __post_init__
+    with pytest.raises(ValueError, match="check"):
+        bucket_sort.sort(x, cfg)
+
+
+# ----------------------------------------------------------------------
+# Checked modes are output-invariant on healthy runs
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.float32, np.uint16])
+@pytest.mark.parametrize("check", ["bounds", "full"])
+def test_checked_sort_matches_unchecked(rng, dtype, check):
+    if np.issubdtype(dtype, np.floating):
+        x = jnp.asarray(rng.normal(size=4000).astype(dtype))
+    else:
+        info = np.iinfo(dtype)
+        x = jnp.asarray(
+            rng.integers(info.min, info.max, 4000).astype(dtype))
+    base = bucket_sort.sort(x, _cfg("off"))
+    out = bucket_sort.sort(x, _cfg(check))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+
+
+@pytest.mark.parametrize("check", ["bounds", "full"])
+def test_checked_batched_and_segmented(rng, check):
+    xs = jnp.asarray(rng.integers(0, 10**6, (4, 1500)).astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(bucket_sort.sort_batched(xs, _cfg(check))),
+        np.sort(np.asarray(xs), axis=1))
+    perm = bucket_sort.argsort_batched(xs, _cfg(check))
+    np.testing.assert_array_equal(
+        np.take_along_axis(np.asarray(xs), np.asarray(perm), axis=1),
+        np.sort(np.asarray(xs), axis=1))
+    x = jnp.asarray(rng.integers(0, 10**6, 3000).astype(np.int32))
+    offs = [0, 700, 700, 2048, 3000]
+    seg = bucket_sort.segment_sort(x, offs, _cfg(check))
+    ref = np.asarray(x).copy()
+    for a, b in zip(offs[:-1], offs[1:]):
+        ref[a:b] = np.sort(ref[a:b])
+    np.testing.assert_array_equal(np.asarray(seg), ref)
+
+
+@pytest.mark.parametrize("check", ["bounds", "full"])
+def test_checked_sort_with_stats(rng, check):
+    x = jnp.asarray(rng.integers(0, 10**6, 3000).astype(np.int32))
+    srt, perm, stats = bucket_sort.sort_with_stats(x, _cfg(check))
+    np.testing.assert_array_equal(np.asarray(srt), np.sort(np.asarray(x)))
+    assert len(stats) >= 1
+    for st in stats:
+        assert int(np.asarray(st["totals"]).max()) <= int(st["capacity"])
+
+
+@pytest.mark.parametrize("check", ["bounds", "full"])
+def test_checked_topk(rng, check):
+    x = jnp.asarray(rng.normal(size=3000).astype(np.float32))
+    v, i = partial_sort.topk(x, 17, _cfg(check))
+    rv, ri = jax.lax.top_k(x, 17)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    xb = jnp.asarray(rng.normal(size=(3, 2000)).astype(np.float32))
+    vb, ib = partial_sort.topk_batched(xb, 9, _cfg(check))
+    rvb, rib = jax.lax.top_k(xb, 9)
+    np.testing.assert_array_equal(np.asarray(vb), np.asarray(rvb))
+    np.testing.assert_array_equal(np.asarray(ib), np.asarray(rib))
+
+
+# ----------------------------------------------------------------------
+# A doctored plan must raise a structured error naming the plan node
+# ----------------------------------------------------------------------
+
+
+def _doctored_plan(x):
+    """A plan whose declared capacity is consistently shrunk below the
+    true bucket fills: execution keeps its static shapes, but the
+    measured fills violate the (doctored) bound."""
+    plan = bucket_sort.resolve_plan(x.shape[0], x.dtype, CFG)
+    root = plan.root
+    assert root.kind == "bucket" and root.cap > 128
+    child = root.bucket_plan
+    bad_child = dataclasses.replace(
+        child, length=128, lp=max(128, child.lp // (child.length // 128 or 1))
+    )
+    if bad_child.kind == "direct":
+        bad_child = dataclasses.replace(bad_child, lp=128)
+    bad_root = dataclasses.replace(root, cap=128, bucket_plan=bad_child)
+    return dataclasses.replace(plan, root=bad_root)
+
+
+def test_doctored_plan_raises_structured_error(rng):
+    x = jnp.asarray(rng.integers(0, 10**9, 4096).astype(np.int32))
+    bad = _doctored_plan(x)
+    with pytest.raises(guard.SortRuntimeError) as ei:
+        bucket_sort.sort_planned(x, bad, check="bounds")
+    err = ei.value
+    assert "bucket" in err.site and "cap=128" in err.site
+    assert err.invariant == "bucket_fill <= cap"
+    assert "128" in err.detail
+
+
+def test_sort_planned_check_passes_on_healthy_plan(rng):
+    x = jnp.asarray(rng.integers(0, 10**9, 4096).astype(np.int32))
+    plan = bucket_sort.resolve_plan(x.shape[0], x.dtype, CFG)
+    out = bucket_sort.sort_planned(x, plan, check="full")
+    np.testing.assert_array_equal(np.asarray(out), np.sort(np.asarray(x)))
+
+
+# ----------------------------------------------------------------------
+# Unit tests of the invariant checkers on synthetically corrupt data
+# ----------------------------------------------------------------------
+
+
+def _plan_and_stats(rng):
+    x = jnp.asarray(rng.integers(0, 10**6, 3000).astype(np.int32))
+    plan = bucket_sort.resolve_plan(x.shape[0], x.dtype, CFG)
+    _, _, stats = bucket_sort.sort_with_stats(x, CFG)
+    return x, plan, stats
+
+
+def test_check_bounds_detects_corruption(rng):
+    x, plan, stats = _plan_and_stats(rng)
+    guard.check_bounds(plan, stats)  # healthy: no raise
+    bad = [dict(st) for st in stats]
+    bad[0]["totals"] = np.asarray(bad[0]["totals"]).copy()
+    bad[0]["totals"][0, 0] = int(bad[0]["capacity"]) + 1
+    with pytest.raises(guard.SortRuntimeError, match="bucket_fill"):
+        guard.check_bounds(plan, bad)
+    with pytest.raises(guard.SortRuntimeError, match="len\\(stats\\)"):
+        guard.check_bounds(plan, stats[:-1] if len(stats) > 1 else stats * 2)
+    bad2 = [dict(st) for st in stats]
+    bad2[0]["capacity"] = int(bad2[0]["capacity"]) + 128
+    with pytest.raises(guard.SortRuntimeError, match="capacity"):
+        guard.check_bounds(plan, bad2)
+
+
+def test_check_full_detects_corruption(rng):
+    x = jnp.asarray(rng.integers(0, 10**6, 500).astype(np.int32))
+    plan = bucket_sort.resolve_plan(x.shape[0], x.dtype, CFG)
+    codec = codec_for(x.dtype, False)
+    kw = tuple(w[None, :] for w in codec.encode(x))
+    vals = jnp.arange(500, dtype=jnp.int32)[None, :]
+    order = jnp.argsort(x)[None, :]
+    skw = tuple(jnp.take_along_axis(w, order, axis=1) for w in kw)
+    sv = jnp.take_along_axis(vals, order, axis=1)
+    guard.check_full(plan, kw, vals, skw, sv)  # healthy: no raise
+    # dropped/duplicated payload
+    with pytest.raises(guard.SortRuntimeError, match="payload permutation"):
+        guard.check_full(plan, kw, vals, skw, sv.at[0, 0].set(sv[0, 1]))
+    # corrupted key content
+    bad_kw = tuple(w.at[0, 0].set(w[0, 0] + 1) for w in skw)
+    with pytest.raises(guard.SortRuntimeError, match="key-word permutation"):
+        guard.check_full(plan, kw, vals, bad_kw, sv)
+    # unsorted output (swap, keeping the multiset intact)
+    swap = jnp.asarray([499] + list(range(1, 499)) + [0])[None, :]
+    ukw = tuple(jnp.take_along_axis(w, swap, axis=1) for w in skw)
+    uv = jnp.take_along_axis(sv, swap, axis=1)
+    with pytest.raises(guard.SortRuntimeError, match="sortedness"):
+        guard.check_full(plan, kw, vals, ukw, uv)
+
+
+def test_check_topk_detects_corruption(rng):
+    x = jnp.asarray(rng.normal(size=200).astype(np.float32))
+    codec = codec_for(x.dtype, descending=True)
+    v, i = jax.lax.top_k(x, 5)
+    i = i.astype(jnp.int32)
+    guard.check_topk(x, v, i, 5, "full", codec)  # healthy
+    with pytest.raises(guard.SortRuntimeError, match="idx"):
+        guard.check_topk(x, v, i.at[0].set(999), 5, "bounds", codec)
+    with pytest.raises(guard.SortRuntimeError, match="unique"):
+        guard.check_topk(x, v, i.at[1].set(i[0]), 5, "full", codec)
+    with pytest.raises(guard.SortRuntimeError, match="bitwise"):
+        guard.check_topk(x, v.at[0].set(v[0] + 1), i, 5, "full", codec)
+    with pytest.raises(guard.SortRuntimeError, match="descending"):
+        guard.check_topk(x, v[::-1], i[::-1], 5, "full", codec)
+
+
+# ----------------------------------------------------------------------
+# Degradation machinery
+# ----------------------------------------------------------------------
+
+
+def test_with_retries_backoff_then_raise():
+    calls, delays = [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", guard.DegradationWarning)
+        assert guard.with_retries(
+            flaky, site="autotune.measure", attempts=3,
+            base_delay=0.01, sleep=delays.append) == "ok"
+    assert len(calls) == 3
+    assert delays == [0.01, 0.02]  # exponential
+    log = guard.degradation_log()
+    assert len(log) == 2 and all(ev.action == "retry" for ev in log)
+
+    calls.clear()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", guard.DegradationWarning)
+        with pytest.raises(OSError):
+            guard.with_retries(
+                lambda: (_ for _ in ()).throw(OSError("always")),
+                site="autotune.measure", attempts=2,
+                base_delay=0.0, sleep=lambda _: None)
+
+
+def test_degradation_log_bounded_and_clearable():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", guard.DegradationWarning)
+        for i in range(guard._LOG_MAX + 10):
+            guard.record_degradation("s", "retry", "a", "b", f"e{i}")
+    log = guard.degradation_log()
+    assert len(log) == guard._LOG_MAX
+    assert log[-1].error == f"e{guard._LOG_MAX + 9}"  # oldest evicted
+    guard.clear_degradation_log()
+    assert guard.degradation_log() == ()
+
+
+def test_degradation_chain_on_kernel_fault(rng):
+    """An injected kernel-launch fault must degrade, warn, and still
+    return the bitwise-correct sorted output."""
+    # fresh length => fresh plan => the trace actually runs (compiled
+    # cache hits skip trace-time fault sites)
+    x = jnp.asarray(rng.integers(0, 10**9, 3072).astype(np.int32))
+    cfg = _cfg("full", tile=128, s=8, direct_max=256)
+    with pytest.warns(guard.DegradationWarning):
+        with faults.inject("kernel.launch", on_hit=1, count=10**6):
+            out = bucket_sort.sort(x, cfg)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(np.asarray(x)))
+    log = guard.degradation_log()
+    assert any(ev.action == "fallback" for ev in log)
+
+
+def test_store_quarantine_on_truncated_json(tmp_path, rng):
+    """Satellite 1: a corrupt plan store must be QUARANTINED (atomic
+    rename to plans.json.corrupt-<pid>), warned about once, and rebuilt
+    — never crash, never silently overwrite the evidence."""
+    path = str(tmp_path / "plans.json")
+    with open(path, "w") as f:
+        f.write('{"schema": 3, "plans": {"trunc')  # torn write
+    autotune.clear_memo()
+    with pytest.warns(guard.DegradationWarning, match="quarantin"):
+        store = autotune._load_store(path)
+    assert store["plans"] == {} and store["schema"] == autotune._STORE_SCHEMA
+    corrupted = list(tmp_path.glob("plans.json.corrupt-*"))
+    assert len(corrupted) == 1
+    assert "trunc" in corrupted[0].read_text()  # evidence preserved
+    assert not (tmp_path / "plans.json").exists()
+    # the path is usable again: plan_for round-trips a fresh store
+    plan = autotune.plan_for(
+        2048, jnp.int32, CFG, path=path, max_trials=2, repeats=1,
+        measure_budget=1)
+    x = jnp.asarray(rng.integers(0, 10**6, 2048).astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(bucket_sort.sort_planned(x, plan)),
+        np.sort(np.asarray(x)))
+    assert json.load(open(path))["schema"] == autotune._STORE_SCHEMA
